@@ -1,0 +1,165 @@
+"""Paper Figs 1-2: write+read 1M float32 in three striding regimes.
+
+  vectors : 100,000 x len-10 vectors   (one file per vector for ra/npy/nrrd;
+                                        one dataset per vector for hdf5)
+  images  : 10,000 x 10x10             (same convention)
+  matrix  : 1 x 10x100,000
+
+Formats: ra (RawArray), hdf5min (in-tree HDF5 subset, scattered-write mode
+like libhdf5), hdf5min-1file (all vectors as datasets in ONE file — the
+favourable-to-HDF5 layout), npy, nrrd, pickle.
+
+The paper's claim under reproduction: RawArray 2-3x faster than HDF5.
+Total data volume identical across regimes; only I/O-call count changes.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import shutil
+import tempfile
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+import repro.core as ra
+from repro.formats import hdf5min, npy, nrrd
+
+# reduced by default so `python -m benchmarks.run` stays fast; --full uses
+# the paper's exact 1M-float total.
+SCALES = {
+    "paper": {"vectors": 100_000, "images": 10_000, "matrix_cols": 100_000},
+    "quick": {"vectors": 8_000, "images": 800, "matrix_cols": 100_000},
+}
+
+
+def _regimes(scale: Dict[str, int]):
+    rng = np.random.default_rng(0)
+    return {
+        "vectors": [rng.normal(size=10).astype(np.float32) for _ in range(scale["vectors"])],
+        "images": [rng.normal(size=(10, 10)).astype(np.float32) for _ in range(scale["images"])],
+        "matrix": [rng.normal(size=(10, scale["matrix_cols"])).astype(np.float32)],
+    }
+
+
+def _file_per_item(write, read, items, d, ext) -> Tuple[float, float]:
+    # warmup: absorb first-call costs (allocator, fs journal) outside timing
+    wdir = os.path.join(d, "warm")
+    os.makedirs(wdir, exist_ok=True)
+    for i in range(min(50, len(items))):
+        p = os.path.join(wdir, f"w{i}.{ext}")
+        write(p, items[i])
+        read(p)
+    os.sync()  # drain writeback from the previous format (fair timing)
+    t0 = time.perf_counter()
+    paths = []
+    for i, a in enumerate(items):
+        p = os.path.join(d, f"{i:06d}.{ext}")
+        write(p, a)
+        paths.append(p)
+    tw = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    acc = 0.0
+    for p in paths:
+        acc += float(read(p).ravel()[0])
+    tr = time.perf_counter() - t0
+    return tw, tr
+
+
+def bench_formats(full: bool = False) -> List[Dict]:
+    scale = SCALES["paper" if full else "quick"]
+    regimes = _regimes(scale)
+    rows = []
+    for regime, items in regimes.items():
+        total_mb = sum(a.nbytes for a in items) / 2**20
+        forms: Dict[str, Tuple[Callable, Callable, str]] = {
+            "ra": (ra.write, ra.read, "ra"),
+            "npy": (np.save, lambda p: np.load(p), "npy"),
+            "nrrd": (nrrd.write, nrrd.read, "nrrd"),
+            "hdf5min": (hdf5min.write, hdf5min.read, "h5"),
+            "pickle": (
+                lambda p, a: pickle.dump(a, open(p, "wb"), protocol=4),
+                lambda p: pickle.load(open(p, "rb")),
+                "pkl",
+            ),
+        }
+        for name, (w, r, ext) in forms.items():
+            d = tempfile.mkdtemp(prefix=f"bench_{name}_")
+            try:
+                tw, tr = _file_per_item(w, r, items, d, ext)
+            finally:
+                shutil.rmtree(d, ignore_errors=True)
+            rows.append(
+                {
+                    "bench": "formats",
+                    "regime": regime,
+                    "format": name,
+                    "n_items": len(items),
+                    "write_s": tw,
+                    "read_s": tr,
+                    "write_mb_s": total_mb / tw,
+                    "read_mb_s": total_mb / tr,
+                }
+            )
+        # hdf5 single-file multi-dataset layouts: batch (favourable lower
+        # bound) and incremental (h5py-call-pattern emulation)
+        if regime != "matrix":
+            for variant, writer in [
+                ("hdf5min-1file", hdf5min.write_datasets),
+                ("hdf5min-1file-incr", hdf5min.write_datasets_incremental),
+            ]:
+                d = tempfile.mkdtemp(prefix="bench_h5one_")
+                try:
+                    p = os.path.join(d, "all.h5")
+                    datasets = {f"d{i:06d}": a for i, a in enumerate(items)}
+                    os.sync()
+                    t0 = time.perf_counter()
+                    writer(p, datasets)
+                    tw = time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    f = hdf5min.H5MinFile(p)
+                    acc = 0.0
+                    for n in f.names:
+                        acc += float(f.read(n).ravel()[0])
+                    tr = time.perf_counter() - t0
+                finally:
+                    shutil.rmtree(d, ignore_errors=True)
+                rows.append(
+                    {
+                        "bench": "formats",
+                        "regime": regime,
+                        "format": variant,
+                        "n_items": len(items),
+                        "write_s": tw,
+                        "read_s": tr,
+                        "write_mb_s": total_mb / tw,
+                        "read_mb_s": total_mb / tr,
+                    }
+                )
+    return rows
+
+
+def derive_speedups(rows: List[Dict]) -> List[Dict]:
+    out = []
+    for regime in ("vectors", "images", "matrix"):
+        sub = {r["format"]: r for r in rows if r["regime"] == regime}
+        if "ra" not in sub:
+            continue
+        base = sub["ra"]
+        for name, r in sub.items():
+            if name == "ra":
+                continue
+            out.append(
+                {
+                    "bench": "formats-speedup",
+                    "regime": regime,
+                    "vs": name,
+                    "ra_write_speedup": r["write_s"] / base["write_s"],
+                    "ra_read_speedup": r["read_s"] / base["read_s"],
+                    "ra_rw_speedup": (r["write_s"] + r["read_s"])
+                    / (base["write_s"] + base["read_s"]),
+                }
+            )
+    return out

@@ -1,0 +1,119 @@
+"""Framework benches: data-loader goodput into a jit'd step + checkpoint
+save/restore bandwidth (the two planes the paper's format carries)."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as ra
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import DataLoader, RaDataset, make_token_dataset
+from repro.distributed import optimizer as optim
+from repro.models import build_model
+
+
+def bench_pipeline(full: bool = False) -> List[Dict]:
+    """Tokens/s of loader alone vs loader+train-step (overlap check)."""
+    rows = []
+    d = tempfile.mkdtemp(prefix="bench_pipe_")
+    try:
+        n_docs = 2048 if full else 512
+        root = make_token_dataset(os.path.join(d, "ds"), n_docs=n_docs, seq_len=512, vocab=8192)
+        ds = RaDataset(root)
+
+        # loader alone
+        dl = DataLoader(ds, 16, seed=0)
+        n_batches = 20 if not full else 60
+        next(dl)  # warm the prefetch thread
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            b = next(dl)
+        dt = time.perf_counter() - t0
+        dl.stop()
+        rows.append(
+            {
+                "bench": "pipeline",
+                "stage": "loader-only",
+                "tokens_per_s": n_batches * 16 * 512 / dt,
+                "batches_per_s": n_batches / dt,
+            }
+        )
+
+        # loader + jit'd train step (tiny model): measures overlap
+        cfg = get_config("paper_lm").with_(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=512, vocab=8192, max_seq=512)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        acfg = optim.AdamWConfig()
+        state = optim.init_state(params, acfg)
+
+        @jax.jit
+        def step(params, state, batch):
+            (l, m), g = jax.value_and_grad(lambda p: model.train_loss(p, batch), has_aux=True)(params)
+            return optim.apply_updates(params, g, state, acfg)[:2] + (l,)
+
+        dl = DataLoader(ds, 16, seed=0)
+        b = next(dl); b.pop("_state")
+        params, state, l = step(params, state, {"tokens": jnp.asarray(b["tokens"].astype(np.int32))})
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            b = next(dl); b.pop("_state")
+            params, state, l = step(params, state, {"tokens": jnp.asarray(b["tokens"].astype(np.int32))})
+        jax.block_until_ready(l)
+        dt = time.perf_counter() - t0
+        st = dl.stats()
+        dl.stop()
+        rows.append(
+            {
+                "bench": "pipeline",
+                "stage": "loader+train",
+                "tokens_per_s": n_batches * 16 * 512 / dt,
+                "loader_wait_frac": st["loader_wait_s"] / dt,
+            }
+        )
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def bench_checkpoint(full: bool = False) -> List[Dict]:
+    """Save/restore bandwidth of the RawArray checkpoint store."""
+    rows = []
+    d = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        mb = 256 if full else 64
+        params = {
+            f"w{i}": jnp.asarray(np.random.default_rng(i).normal(size=(mb * 2**20 // 8 // 4,)), jnp.float32)
+            for i in range(4)
+        }
+        total = sum(x.nbytes for x in jax.tree_util.tree_leaves(params)) / 2**20
+        t0 = time.perf_counter()
+        p = save_checkpoint(os.path.join(d, "ck"), 1, params)
+        tw = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        back, _, _ = load_checkpoint(p, params, mmap=False)
+        tr = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        back_m, _, _ = load_checkpoint(p, params, mmap=True)
+        _ = float(jax.tree_util.tree_leaves(back_m)[0][0])  # touch one page
+        tm = time.perf_counter() - t0
+        rows.append(
+            {
+                "bench": "checkpoint",
+                "size_mb": total,
+                "save_mb_s": total / tw,
+                "restore_mb_s": total / tr,
+                "mmap_open_s": tm,
+            }
+        )
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return rows

@@ -1,0 +1,314 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Three terms per (arch x shape x mesh) cell:
+
+    compute_s    = FLOPs_analytic        / (chips · 197e12)      [bf16 MXU]
+    memory_s     = HBM_bytes_analytic    / (chips · 819e9)
+    collective_s = coll_bytes_per_device / 50e9                  [ICI link]
+
+Why analytic FLOPs/bytes instead of XLA cost_analysis: XLA's HLO cost
+analysis counts each ``while`` (lax.scan) body ONCE — a 48-layer scanned
+stack is undercounted ~48x. We therefore derive FLOPs and HBM traffic from
+the model math (formulas below, cross-checked against trip-count-scaled
+HLO where feasible) and keep XLA's raw numbers in the JSON as a caveated
+reference. Collective bytes ARE taken from the compiled HLO, trip-count
+scaled (repro.launch.hlo_analysis) — they're per-device program bytes, so
+the collective term divides by link bandwidth only.
+
+FLOP conventions: matmul = 2mnk; train = 3x forward (bwd = 2x fwd);
+attention = 2·B·H·Sq·Skv_eff·hd x2 (scores+AV), causal halves Skv_eff,
+sliding window caps it; remat adds +1x forward of recomputed layers
+(policy: full recompute => train factor 4x fwd for layer stacks).
+
+HBM conventions (traffic per step, bf16=2B unless stated):
+    train: params 3x (read fwd + read bwd + write upd) + opt moments r+w
+           + activations: per layer save bf16 carry r+w + recompute reads
+    decode: params_active 1x + KV/state cache read + write(new col)
+    prefill: params 1x + cache write + activations 1x
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, Dict
+
+from repro.configs import get_config
+from repro.launch.shapes import ENCDEC_TGT, SHAPES, ShapeSpec
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link (ICI)
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+# --------------------------------------------------------------- FLOPs model
+def _attn_flops(cfg: ModelConfig, B: int, Sq: int, Skv: int, causal: bool) -> float:
+    """Per-layer attention score+AV flops (fwd)."""
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        eff = (Skv / 2 if (causal and Sq == Skv) else Skv)
+        return 2 * B * cfg.n_heads * Sq * eff * (qk + m.v_head_dim)
+    hd = cfg.head_dim
+    eff = Skv
+    if cfg.sliding_window and cfg.global_every:
+        # weighted local/global mix
+        frac_g = 1.0 / cfg.global_every
+        eff_l = min(Skv, cfg.sliding_window)
+        eff_g = Skv / 2 if (causal and Sq == Skv) else Skv
+        eff = frac_g * eff_g + (1 - frac_g) * eff_l
+    elif cfg.sliding_window:
+        eff = min(Skv, cfg.sliding_window)
+    elif causal and Sq == Skv:
+        eff = Skv / 2
+    return 2 * B * cfg.n_heads * Sq * eff * (2 * hd)
+
+
+def _layer_matmul_params(cfg: ModelConfig, moe_layer: bool) -> float:
+    """Matmul params per layer (dense equivalent N for 2·N·T flops)."""
+    d = cfg.d_model
+    n = 0.0
+    if cfg.attn_type == "gqa":
+        n += d * cfg.n_heads * cfg.head_dim * 2  # wq + wo
+        n += d * cfg.n_kv_heads * cfg.head_dim * 2
+    elif cfg.attn_type == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        n += d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+        n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        n += m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+        n += cfg.n_heads * m.v_head_dim * d
+    if cfg.ssm:
+        di = cfg.d_inner
+        GN = cfg.ssm.n_groups * cfg.ssm.d_state
+        n += d * (2 * di + 2 * GN + cfg.n_ssm_heads) + di * d
+    if moe_layer and cfg.moe:
+        m = cfg.moe
+        n += d * m.n_experts  # router
+        n += (m.top_k + m.n_shared) * 3 * d * m.d_ff_expert  # ACTIVE experts
+    elif cfg.d_ff:
+        n += (3 if cfg.mlp_gated else 2) * d * cfg.d_ff
+    return n
+
+
+def _ssd_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    """Per-layer SSD chunk-scan flops (fwd)."""
+    s = cfg.ssm
+    H, P, N, Q = cfg.n_ssm_heads, s.headdim, s.d_state, s.chunk
+    nc = max(1, S // Q)
+    per_chunk = 2 * Q * Q * N + 2 * Q * Q * H * P + 2 * Q * N * H * P * 2
+    return B * nc * per_chunk
+
+
+def flops_model(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, float]:
+    B, S = shape.batch, shape.seq
+    kind = shape.kind
+    L = cfg.n_layers
+    moe_layers = (L - cfg.moe.first_dense) if (cfg.moe and cfg.moe.n_experts) else 0
+    dense_layers = L - moe_layers
+
+    if cfg.family == "encdec":
+        if kind == "decode":
+            T = B  # one token
+        else:
+            T = B * ENCDEC_TGT  # decoder tokens
+        T_enc = B * S if kind != "decode" else 0
+    elif cfg.family == "vlm":
+        T = B * S if kind != "decode" else B
+        T_enc = 0
+    else:
+        T = B * S if kind != "decode" else B
+        T_enc = 0
+
+    # projections / FFN
+    fwd = T * 2 * (
+        dense_layers * _layer_matmul_params(cfg, False)
+        + moe_layers * _layer_matmul_params(cfg, True)
+    )
+    # logits
+    fwd += T * 2 * cfg.d_model * cfg.vocab
+    # attention / ssd
+    if cfg.family in ("dense", "moe", "vlm"):
+        Skv = S if kind != "decode" else S
+        Sq = S if kind != "decode" else 1
+        fwd += L * _attn_flops(cfg, B, Sq, Skv, causal=True)
+    if cfg.family == "ssm":
+        if kind == "decode":
+            fwd += L * B * 2 * cfg.n_ssm_heads * cfg.ssm.headdim * cfg.ssm.d_state * 2
+        else:
+            fwd += L * _ssd_flops(cfg, B, S)
+    if cfg.family == "hybrid":
+        n_inv = L // max(1, cfg.hybrid_attn_every)
+        if kind == "decode":
+            fwd += L * B * 2 * cfg.n_ssm_heads * cfg.ssm.headdim * cfg.ssm.d_state * 2
+            fwd += n_inv * _attn_flops(cfg.with_(head_dim=2 * cfg.d_model // cfg.n_heads), B, 1, S, causal=True)
+            fwd += T * 2 * n_inv * (3 * cfg.d_model * cfg.d_ff + 2 * cfg.d_model * 2 * cfg.d_model)
+        else:
+            fwd += L * _ssd_flops(cfg, B, S)
+            acfg = cfg.with_(head_dim=2 * cfg.d_model // cfg.n_heads)
+            fwd += n_inv * _attn_flops(acfg, B, S, S, causal=True)
+            fwd += T * 2 * n_inv * (3 * cfg.d_model * cfg.d_ff + 2 * cfg.d_model * 2 * cfg.d_model)
+    if cfg.family == "encdec" and T_enc:
+        enc_params = cfg.n_enc_layers * (
+            4 * cfg.d_model * cfg.n_heads * cfg.head_dim
+            + 2 * cfg.d_model * cfg.d_ff
+        )
+        fwd += T_enc * 2 * enc_params
+        fwd += cfg.n_enc_layers * _attn_flops(cfg.with_(sliding_window=0), B, S, S, causal=False)
+        # decoder cross-attn over encoder states
+        fwd += cfg.n_layers * _attn_flops(cfg.with_(sliding_window=0), B, T // B, S, causal=False)
+    if cfg.mtp and kind == "train":
+        fwd += T * 2 * (_layer_matmul_params(cfg, False) + 2 * cfg.d_model**2 + cfg.d_model * cfg.vocab)
+
+    if kind == "train":
+        factor = 3.0 + (1.0 if cfg.remat else 0.0)  # fwd+bwd(2x) + remat refwd
+        total = fwd * factor
+    else:
+        total = fwd
+    model_flops = 6 * cfg.active_param_count() * T if kind == "train" else 2 * cfg.active_param_count() * T
+    return {"flops_analytic": total, "flops_fwd": fwd, "model_flops_6nd": model_flops}
+
+
+# --------------------------------------------------------------- bytes model
+def bytes_model(cfg: ModelConfig, shape: ShapeSpec, n_params: int) -> Dict[str, float]:
+    B, S = shape.batch, shape.seq
+    pb = 2 if cfg.param_dtype == "bfloat16" else 4
+    ab = 2 if cfg.compute_dtype == "bfloat16" else 4
+    mom = 2 if cfg.opt_moment_dtype == "int8" else 8  # m+v bytes/param
+    kind = shape.kind
+    L = cfg.n_layers
+    d = cfg.d_model
+
+    if kind == "train":
+        T = B * S if cfg.family != "encdec" else B * ENCDEC_TGT
+        params_traffic = n_params * (3 * pb + 4 + mom * 2)  # grads f32 r/w once
+        act_per_layer = T * d * ab
+        # save + reread + recompute-write ≈ 4x per layer with remat
+        act_traffic = L * act_per_layer * 4
+        logits = T * cfg.vocab * 4 / 16  # chunked CE: one chunk alive, f32 /16 seq-chunks... traffic ≈ T·V·4 total r+w
+        act_traffic += 2 * T * cfg.vocab * 4 / 8  # logits produced+consumed, chunked
+        total = params_traffic + act_traffic
+        cache = 0.0
+    elif kind == "prefill":
+        T = B * S
+        total = n_params * pb + L * T * d * ab * 2
+        cache = _cache_bytes(cfg, B, S, ab)
+        total += cache
+    else:  # decode
+        cache = _cache_bytes(cfg, B, S, ab)
+        total = cfg.active_param_count() * pb + cache  # read whole cache + params
+    return {"hbm_bytes_analytic": float(total), "cache_bytes": float(cache)}
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int, ab: int) -> float:
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        return L * B * 2 * cfg.n_kv_heads * cfg.head_dim * S * ab
+    if cfg.family == "moe":
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            return L * B * S * (m.kv_lora_rank + m.qk_rope_head_dim) * ab
+        return L * B * 2 * cfg.n_kv_heads * cfg.head_dim * S * ab
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        return L * B * (cfg.n_ssm_heads * s.headdim * s.d_state + 3 * cfg.d_inner) * ab
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        n_inv = L // max(1, cfg.hybrid_attn_every)
+        ssm = L * B * (cfg.n_ssm_heads * s.headdim * s.d_state + 3 * cfg.d_inner) * ab
+        attn = n_inv * B * 2 * cfg.n_kv_heads * (2 * cfg.d_model // cfg.n_heads) * S * ab
+        return ssm + attn
+    if cfg.family == "encdec":
+        return cfg.n_layers * B * 2 * cfg.n_heads * cfg.head_dim * (S + cfg.enc_seq) * ab
+    return 0.0
+
+
+# --------------------------------------------------------------- report
+def analyze_cell(dryrun_json: Dict[str, Any]) -> Dict[str, Any]:
+    cfg = get_config(dryrun_json["arch"])
+    shape = SHAPES[dryrun_json["shape"]]
+    chips = dryrun_json["chips"]
+    fl = flops_model(cfg, shape)
+    by = bytes_model(cfg, shape, dryrun_json["n_params"])
+    coll_dev = dryrun_json["collectives"]["total_bytes"]
+
+    compute_s = fl["flops_analytic"] / (chips * PEAK_FLOPS)
+    memory_s = by["hbm_bytes_analytic"] / (chips * HBM_BW)
+    collective_s = coll_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())  # perfectly-overlapped lower bound
+    # roofline fraction: ideal time for the USEFUL work on its best-case
+    # bounding resource, over the estimated achieved step time. Useful work =
+    # 6·N·D model flops (train/prefill) or the unavoidable params+cache bytes
+    # (decode) — so a perfectly-lean kernel scores 1.0 and remat/dispatch
+    # waste or collective overhang pushes it down.
+    useful_compute_s = fl["model_flops_6nd"] / (chips * PEAK_FLOPS)
+    useful_memory_s = (
+        (by["cache_bytes"] + cfg.active_param_count() * (2 if cfg.param_dtype == "bfloat16" else 4))
+        / (chips * HBM_BW)
+        if dryrun_json["kind"] == "decode"
+        else 0.0
+    )
+    useful_ideal_s = max(useful_compute_s, useful_memory_s)
+    mfu = useful_ideal_s / step_s if step_s > 0 else 0.0
+
+    xla_flops = dryrun_json["cost_analysis"].get("flops", 0.0)
+    return {
+        **{k: dryrun_json[k] for k in ("cell", "arch", "shape", "mesh", "chips", "kind")},
+        **fl,
+        **by,
+        "collective_bytes_per_dev": coll_dev,
+        "collective_per_kind": dryrun_json["collectives"]["per_kind"],
+        **terms,
+        "dominant": dominant,
+        "bound_step_s": step_s,
+        "roofline_fraction": mfu,
+        "useful_flops_ratio": (
+            fl["model_flops_6nd"] / fl["flops_analytic"] if fl["flops_analytic"] else 0.0
+        ),
+        "xla_flops_raw_caveat_scan_once": xla_flops,
+        "temp_bytes_per_dev": dryrun_json["memory_analysis"].get("temp_size_in_bytes", 0),
+        "arg_bytes_per_dev": dryrun_json["memory_analysis"].get("argument_size_in_bytes", 0),
+        "fits_hbm_16gib": (
+            dryrun_json["memory_analysis"].get("temp_size_in_bytes", 0)
+            + dryrun_json["memory_analysis"].get("argument_size_in_bytes", 0)
+        )
+        < 16 * 2**30,
+    }
+
+
+def run(out_path: str | None = None) -> list:
+    rows = []
+    for fname in sorted(os.listdir(DRYRUN_DIR)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, fname)) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            continue
+        rows.append(analyze_cell(d))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    rows = run(os.path.join(DRYRUN_DIR, "..", "roofline.json"))
+    hdr = f"{'cell':58s} {'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} dom    {'roofline%':>9s} fits"
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['cell']:58s} {r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+            f"{r['collective_s']:9.4f} {r['dominant'][:4]:6s} "
+            f"{100*r['roofline_fraction']:8.1f}% {r['fits_hbm_16gib']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark harness: one function per paper table/figure + framework
+planes. Prints ``name,key=value,...`` CSV-ish lines and writes
+experiments/bench_results.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` uses the paper's exact sizes (1M floats / 50k images); default
+is a quick mode with identical structure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _print_rows(rows):
+    for r in rows:
+        keys = [k for k in r if k not in ("bench",)]
+        print(r["bench"] + "," + ",".join(f"{k}={r[k]}" for k in keys))
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="paper-scale sizes")
+    p.add_argument("--only", default=None, help="formats|images|pipeline|checkpoint|roofline")
+    args = p.parse_args(argv)
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks.bench_formats import bench_formats, derive_speedups
+    from benchmarks.bench_images import bench_images
+    from benchmarks.bench_pipeline import bench_checkpoint, bench_pipeline
+
+    all_rows = []
+    wanted = args.only.split(",") if args.only else ["formats", "images", "pipeline", "checkpoint", "roofline"]
+
+    if "formats" in wanted:
+        rows = bench_formats(full=args.full)
+        rows += derive_speedups(rows)
+        _print_rows(rows)
+        all_rows += rows
+    if "images" in wanted:
+        rows = bench_images(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+    if "pipeline" in wanted:
+        rows = bench_pipeline(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+    if "checkpoint" in wanted:
+        rows = bench_checkpoint(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+    if "roofline" in wanted:
+        try:
+            from benchmarks.roofline import run as roofline_run
+
+            rrows = roofline_run()
+            for r in rrows:
+                print(
+                    "roofline,cell={},dominant={},compute_s={:.4f},"
+                    "memory_s={:.4f},collective_s={:.4f},roofline_frac={:.4f}".format(
+                        r["cell"], r["dominant"], r["compute_s"],
+                        r["memory_s"], r["collective_s"], r["roofline_fraction"],
+                    )
+                )
+            all_rows += rrows
+        except (FileNotFoundError, OSError):
+            print("roofline,skipped=no dryrun artifacts (run repro.launch.dryrun first)")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"# wrote {out} ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the RawArray format end to end (paper §3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.core as ra  # noqa: E402
+
+
+def main() -> None:
+    d = tempfile.mkdtemp(prefix="ra_quickstart_")
+
+    # --- the paper's Python example ----------------------------------------
+    img = np.linspace(0, 1, 28 * 28, dtype=np.float32).reshape(28, 28)
+    path = os.path.join(d, "airplane.ra")
+    ra.write(path, img)
+    back = ra.read(path)
+    back = np.array(back)
+    back[0, 0] *= 2
+    ra.write(path, back)
+    print(f"wrote + modified + rewrote {path} ({os.path.getsize(path)} bytes)")
+
+    # --- header introspection (paper §3.2) -----------------------------------
+    hdr = ra.header_of(path)
+    print(f"header: eltype={hdr.eltype} elbyte={hdr.elbyte} dims={list(hdr.shape)}")
+    from repro.core.racat import format_header, od_commands
+
+    print(format_header(hdr))
+    print("\nod commands (try them!):")
+    print(od_commands(path, hdr))
+    if os.path.exists("/usr/bin/od"):
+        print("\n$ od -N 48 -t u8", path)
+        subprocess.run(["od", "-N", "48", "-t", "u8", path], check=False)
+
+    # --- complex data with -inf, as in the paper's test.ra -------------------
+    z = np.zeros((6, 2), dtype=np.complex64)
+    z.real = np.arange(12).reshape(6, 2)
+    z.imag[0, 0] = -np.inf
+    ra.write(os.path.join(d, "test.ra"), z)
+    print("\ncomplex roundtrip ok:", np.array_equal(
+        ra.read(os.path.join(d, "test.ra")), z, equal_nan=True))
+
+    # --- memory mapping + metadata -------------------------------------------
+    big = np.random.default_rng(0).normal(size=(1000, 256)).astype(np.float32)
+    bpath = os.path.join(d, "big.ra")
+    ra.write(bpath, big, metadata=b'{"units": "mm", "fov": [192, 192]}')
+    m = ra.memmap(bpath)  # zero-copy
+    print("mmap slice equal:", np.array_equal(np.asarray(m[100:110]), big[100:110]))
+    print("metadata:", ra.read_metadata(bpath).decode())
+
+    # --- sharded store (beyond-paper, DESIGN.md §7) ---------------------------
+    ra.write_sharded(os.path.join(d, "sharded"), big, nshards=4)
+    sl = ra.read_slice(os.path.join(d, "sharded"), 250, 750)
+    print("sharded elastic read equal:", np.array_equal(sl, big[250:750]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Checkpoints as RawArray tensor stores."""
+
+from .store import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_resharded,
+    save_checkpoint,
+)
+
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "restore_resharded",
+    "CheckpointManager",
+]

@@ -1,0 +1,69 @@
+"""RawArray (.ra) — the paper's archival format, as the framework's data plane.
+
+Public API mirrors the paper's reference implementations::
+
+    import repro.core as ra
+    ra.write("x.ra", arr)
+    arr = ra.read("x.ra")
+    m = ra.memmap("x.ra")          # zero-copy
+"""
+
+from .header import Header, decode_header, read_header
+from .io import (
+    append_metadata,
+    header_of,
+    memmap,
+    memmap_slice,
+    nbytes_on_disk,
+    read,
+    read_metadata,
+    write,
+    write_like,
+)
+from .sharded import ShardIndex, load_index, read_sharded, read_slice, write_sharded
+from .spec import (
+    ELTYPE_BRAIN,
+    ELTYPE_COMPLEX,
+    ELTYPE_FLOAT,
+    ELTYPE_INT,
+    ELTYPE_STRUCT,
+    ELTYPE_UINT,
+    FLAG_BIG_ENDIAN,
+    FLAG_CRC32_TRAILER,
+    FLAG_ZLIB,
+    MAGIC,
+    MAGIC_BYTES,
+    RawArrayError,
+)
+
+__all__ = [
+    "Header",
+    "read_header",
+    "decode_header",
+    "read",
+    "write",
+    "memmap",
+    "memmap_slice",
+    "read_metadata",
+    "append_metadata",
+    "header_of",
+    "write_like",
+    "nbytes_on_disk",
+    "write_sharded",
+    "read_sharded",
+    "read_slice",
+    "load_index",
+    "ShardIndex",
+    "MAGIC",
+    "MAGIC_BYTES",
+    "RawArrayError",
+    "ELTYPE_STRUCT",
+    "ELTYPE_INT",
+    "ELTYPE_UINT",
+    "ELTYPE_FLOAT",
+    "ELTYPE_COMPLEX",
+    "ELTYPE_BRAIN",
+    "FLAG_BIG_ENDIAN",
+    "FLAG_CRC32_TRAILER",
+    "FLAG_ZLIB",
+]

@@ -1,0 +1,236 @@
+"""RawArray read / write / memory-map.
+
+Faithful to the paper: ``write`` emits header ++ raw bytes (++ optional
+metadata); ``read`` parses the numeric header and hands back an ndarray;
+``memmap`` maps the data segment directly (the format's linear up-front
+layout makes this a single ``np.memmap`` with a computed offset).
+
+Beyond-paper (flag-gated, backward compatible, DESIGN.md §7): optional CRC32
+trailer and zlib payload compression.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Any, Optional, Tuple, Union
+
+import numpy as np
+
+from .header import Header, decode_header, read_header
+from .spec import FLAG_BIG_ENDIAN, FLAG_CRC32_TRAILER, FLAG_ZLIB, RawArrayError
+
+PathLike = Union[str, os.PathLike]
+
+# Buffered single-syscall-ish writes: header+data concatenated when small,
+# else two writes. Keeps the hot path syscall count minimal (paper's "Fast").
+_SMALL = 1 << 20
+
+
+def _as_bytes_view(arr: np.ndarray) -> memoryview:
+    """Zero-copy byte view of a contiguous array; copies only for dtypes that
+    don't speak the buffer protocol (e.g. ml_dtypes bfloat16)."""
+    if not arr.size:
+        return memoryview(b"")
+    try:
+        return memoryview(arr).cast("B")
+    except (ValueError, TypeError):
+        return memoryview(arr.view(np.uint8).reshape(-1))
+
+
+def write(
+    path: PathLike,
+    arr: np.ndarray,
+    *,
+    metadata: Optional[bytes] = None,
+    big_endian: bool = False,
+    crc32: bool = False,
+    compress: bool = False,
+) -> int:
+    """Write ``arr`` as a RawArray file. Returns bytes written."""
+    orig_shape = np.asarray(arr).shape
+    arr = np.ascontiguousarray(arr)  # NB: promotes 0-d to (1,)...
+    arr = arr.reshape(orig_shape)    # ...so restore the true rank (ndims=0 is legal)
+    flags = 0
+    if big_endian:
+        flags |= FLAG_BIG_ENDIAN
+        arr = arr.astype(arr.dtype.newbyteorder(">"), copy=False)
+    else:
+        # normalize to little-endian on disk
+        if arr.dtype.byteorder == ">":
+            arr = arr.astype(arr.dtype.newbyteorder("<"), copy=False)
+    payload = _as_bytes_view(arr)
+    if compress:
+        flags |= FLAG_ZLIB
+        payload = memoryview(zlib.compress(bytes(payload), level=1))
+    if crc32:
+        flags |= FLAG_CRC32_TRAILER
+    hdr = Header.for_array(arr, flags=flags, data_length=len(payload))
+    head = hdr.encode()
+    tmp = os.fspath(path)
+    with open(tmp, "wb") as f:
+        if len(payload) < _SMALL:
+            buf = bytearray(head)
+            buf += payload
+            if metadata:
+                buf += metadata
+            if crc32:
+                buf += zlib.crc32(payload).to_bytes(4, "little")
+            f.write(buf)
+            return len(buf)
+        n = f.write(head)
+        n += f.write(payload)
+        if metadata:
+            n += f.write(metadata)
+        if crc32:
+            n += f.write(zlib.crc32(payload).to_bytes(4, "little"))
+        return n
+
+
+def read(
+    path: PathLike,
+    *,
+    with_metadata: bool = False,
+    strict_flags: bool = True,
+) -> Union[np.ndarray, Tuple[np.ndarray, bytes]]:
+    """Read a RawArray file into an ndarray (native little-endian in memory).
+
+    Fast path: plain little-endian payload with no trailer reads the header
+    from one small syscall and ``readinto``s the payload DIRECTLY into the
+    output array (zero intermediate copy — what the C reference does with
+    fread into malloc'd memory)."""
+    with open(path, "rb", buffering=0) as f:
+        head = f.read(4096)
+        hdr = decode_header(head, strict_flags=strict_flags)
+        plain = not (hdr.flags & (FLAG_ZLIB | FLAG_CRC32_TRAILER)) and not hdr.big_endian
+        if plain and not with_metadata:
+            out = np.empty(hdr.shape, dtype=hdr.dtype())
+            if hdr.data_length == 0:
+                return out
+            mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
+            inline = head[hdr.nbytes : hdr.nbytes + hdr.data_length]
+            mv[: len(inline)] = inline
+            got = len(inline)
+            while got < hdr.data_length:
+                n = f.readinto(mv[got:])
+                if not n:
+                    raise RawArrayError(
+                        f"truncated data segment: wanted {hdr.data_length}, got {got}"
+                    )
+                got += n
+            return out
+        rest = f.read()
+        blob = head + rest
+        payload = blob[hdr.nbytes : hdr.nbytes + hdr.data_length]
+        if len(payload) != hdr.data_length:
+            raise RawArrayError(
+                f"truncated data segment: wanted {hdr.data_length}, got {len(payload)}"
+            )
+        trailer = blob[hdr.nbytes + hdr.data_length :]
+    meta = trailer
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        if len(trailer) < 4:
+            raise RawArrayError("CRC flag set but trailer missing")
+        meta, crc = trailer[:-4], int.from_bytes(trailer[-4:], "little")
+        if zlib.crc32(payload) != crc:
+            raise RawArrayError("CRC32 mismatch: data segment corrupted")
+    if hdr.flags & FLAG_ZLIB:
+        payload = zlib.decompress(payload)
+    dtype = hdr.dtype()
+    arr = np.frombuffer(payload, dtype=dtype)
+    if hdr.big_endian:
+        arr = arr.astype(dtype.newbyteorder("<"))
+    arr = arr.reshape(hdr.shape)
+    if with_metadata:
+        return arr, meta
+    return arr
+
+
+def read_metadata(path: PathLike) -> bytes:
+    """Read only the trailing user metadata (cheap: header + seek)."""
+    with open(path, "rb") as f:
+        hdr = read_header(f)
+        f.seek(hdr.nbytes + hdr.data_length)
+        tail = f.read()
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        tail = tail[:-4]
+    return tail
+
+
+def header_of(path: PathLike) -> Header:
+    with open(path, "rb") as f:
+        return read_header(f)
+
+
+def memmap(path: PathLike, mode: str = "r") -> np.ndarray:
+    """Memory-map the data segment (zero-copy, the format's raison d'etre).
+
+    Raises for compressed or big-endian payloads (not mappable in-place).
+    """
+    with open(path, "rb") as f:
+        hdr = read_header(f)
+    if hdr.flags & FLAG_ZLIB:
+        raise RawArrayError("cannot memory-map a compressed payload")
+    if hdr.big_endian:
+        raise RawArrayError("cannot memory-map a big-endian payload on LE host")
+    if hdr.shape == ():  # np.memmap coerces 0-d to (1,); reshape it back
+        m = np.memmap(path, dtype=hdr.dtype(), mode=mode, offset=hdr.nbytes, shape=(1,))
+        return m.reshape(())
+    return np.memmap(path, dtype=hdr.dtype(), mode=mode, offset=hdr.nbytes, shape=hdr.shape)
+
+
+def memmap_slice(path: PathLike, start: int, stop: int, mode: str = "r") -> np.ndarray:
+    """Map only rows [start, stop) of axis 0 — the multi-host shard read.
+
+    Because the layout is linear with a fixed-size numeric header, the byte
+    range of a row slab is pure offset arithmetic; each host touches only
+    its pages.
+    """
+    with open(path, "rb") as f:
+        hdr = read_header(f)
+    if hdr.flags & FLAG_ZLIB:
+        raise RawArrayError("cannot memory-map a compressed payload")
+    if not hdr.shape:
+        raise RawArrayError("cannot row-slice a 0-d array")
+    n = hdr.shape[0]
+    start, stop = max(0, start), min(stop, n)
+    if stop < start:
+        raise RawArrayError(f"bad slice [{start}, {stop})")
+    row = hdr.elbyte
+    for d in hdr.shape[1:]:
+        row *= d
+    return np.memmap(
+        path,
+        dtype=hdr.dtype(),
+        mode=mode,
+        offset=hdr.nbytes + start * row,
+        shape=(stop - start,) + hdr.shape[1:],
+    )
+
+
+def append_metadata(path: PathLike, metadata: bytes) -> None:
+    """Append user metadata to an existing file (paper: 'can be anything')."""
+    hdr = header_of(path)
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        raise RawArrayError("append to CRC-trailed file would corrupt the trailer")
+    with open(path, "ab") as f:
+        f.write(metadata)
+
+
+def write_like(path: PathLike, header: Header, payload: bytes) -> None:
+    """Low-level escape hatch: write an explicit header + raw payload."""
+    with open(path, "wb") as f:
+        f.write(header.encode())
+        f.write(payload)
+
+
+def nbytes_on_disk(arr_or_shape: Any, dtype: Optional[np.dtype] = None) -> int:
+    """Predict file size for an array (header + data, no metadata)."""
+    if isinstance(arr_or_shape, np.ndarray):
+        shape, itemsize = arr_or_shape.shape, arr_or_shape.dtype.itemsize
+    else:
+        shape, itemsize = tuple(arr_or_shape), np.dtype(dtype).itemsize
+    n = itemsize
+    for d in shape:
+        n *= d
+    return 48 + 8 * len(shape) + n

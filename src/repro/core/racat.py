@@ -1,0 +1,76 @@
+"""Command-line introspection for RawArray files (paper §3.2).
+
+The paper demonstrates introspection with ``od``; this module is the
+in-tree equivalent plus a self-test that our files *are* od-compatible::
+
+    $ PYTHONPATH=src python -m repro.core.racat header test.ra
+    $ PYTHONPATH=src python -m repro.core.racat data test.ra | head
+    $ PYTHONPATH=src python -m repro.core.racat od test.ra   # prints the od commands
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from .header import Header
+from .io import header_of, read, read_metadata
+from .spec import ELTYPE_NAMES
+
+
+def format_header(hdr: Header) -> str:
+    lines = [
+        f"magic        rawarray (0x7961727261776172)",
+        f"flags        {hdr.flags:#x}"
+        + (" (big-endian)" if hdr.big_endian else ""),
+        f"eltype       {hdr.eltype} ({ELTYPE_NAMES.get(hdr.eltype, '?')})",
+        f"elbyte       {hdr.elbyte}",
+        f"data_length  {hdr.data_length}",
+        f"ndims        {hdr.ndims}",
+        f"dims         {list(hdr.shape)}",
+        f"header_bytes {hdr.nbytes}",
+        f"numpy dtype  {hdr.dtype()}",
+    ]
+    return "\n".join(lines)
+
+
+def od_commands(path: str, hdr: Header) -> str:
+    """Emit the exact od invocations from the paper for this file."""
+    fmt = {4: "-f", 8: "-d"}.get(hdr.elbyte, "-t x1")
+    return "\n".join(
+        [
+            f"od -N 48 -t u8 {path}        # fixed header as u64",
+            f"od -N 48 -c {path}           # see the 'rawarray' magic",
+            f"od -j {hdr.nbytes} {fmt} {path}   # the data segment",
+        ]
+    )
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="racat", description=__doc__)
+    p.add_argument("cmd", choices=["header", "data", "meta", "od"])
+    p.add_argument("path")
+    p.add_argument("--limit", type=int, default=16, help="max elements to print")
+    args = p.parse_args(argv)
+
+    hdr = header_of(args.path)
+    if args.cmd == "header":
+        print(format_header(hdr))
+    elif args.cmd == "data":
+        arr = read(args.path, strict_flags=False)
+        flat = np.asarray(arr).reshape(-1)
+        np.set_printoptions(threshold=args.limit)
+        print(flat[: args.limit])
+        if flat.size > args.limit:
+            print(f"... ({flat.size} elements total)")
+    elif args.cmd == "meta":
+        sys.stdout.buffer.write(read_metadata(args.path))
+    elif args.cmd == "od":
+        print(od_commands(args.path, hdr))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,150 @@
+"""Sharded RawArray stores — one logical array striped over N ``.ra`` files.
+
+Beyond-paper extension (DESIGN.md §7): the paper's vision is "metadata as
+human-readable markup, raw data in RawArray files, organized by a file
+system directory structure". A sharded store is exactly that — a directory::
+
+    <name>/
+      index.json          {"shape": [...], "dtype": "float32",
+                           "axis": 0, "offsets": [0, r0, r0+r1, ...],
+                           "files": ["shard_00000.ra", ...]}
+      shard_00000.ra      rows [offsets[0], offsets[1])
+      shard_00001.ra      ...
+
+Each shard is an independent, self-describing RawArray file, so shards can
+be written in parallel by different hosts and read back under a *different*
+slicing (elastic restore): ``read_slice`` touches only the shards that
+overlap the requested row range, via mmap.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import io as raio
+from .spec import RawArrayError
+
+INDEX_NAME = "index.json"
+
+
+@dataclass(frozen=True)
+class ShardIndex:
+    shape: Tuple[int, ...]
+    dtype: str
+    axis: int
+    offsets: Tuple[int, ...]  # len = nshards + 1, offsets[0] == 0
+    files: Tuple[str, ...]
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "format": "rawarray-sharded-v1",
+                "shape": list(self.shape),
+                "dtype": self.dtype,
+                "axis": self.axis,
+                "offsets": list(self.offsets),
+                "files": list(self.files),
+            },
+            indent=1,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "ShardIndex":
+        d = json.loads(text)
+        if d.get("format") != "rawarray-sharded-v1":
+            raise RawArrayError(f"not a sharded RawArray index: {d.get('format')}")
+        return cls(
+            shape=tuple(d["shape"]),
+            dtype=d["dtype"],
+            axis=int(d["axis"]),
+            offsets=tuple(d["offsets"]),
+            files=tuple(d["files"]),
+        )
+
+
+def _shard_name(i: int) -> str:
+    return f"shard_{i:05d}.ra"
+
+
+def write_sharded(
+    dirpath: str,
+    arr: np.ndarray,
+    *,
+    nshards: int,
+    axis: int = 0,
+    workers: int = 4,
+) -> ShardIndex:
+    """Split ``arr`` along ``axis`` into ``nshards`` RawArray files."""
+    if axis != 0:
+        arr = np.moveaxis(arr, axis, 0)
+    n = arr.shape[0]
+    nshards = max(1, min(nshards, n)) if n else 1
+    bounds = np.linspace(0, n, nshards + 1).astype(int)
+    os.makedirs(dirpath, exist_ok=True)
+    files = [_shard_name(i) for i in range(nshards)]
+
+    def _write(i: int) -> None:
+        raio.write(os.path.join(dirpath, files[i]), arr[bounds[i] : bounds[i + 1]])
+
+    if workers > 1 and nshards > 1:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            list(pool.map(_write, range(nshards)))
+    else:
+        for i in range(nshards):
+            _write(i)
+
+    # index records the *original* (pre-moveaxis) logical shape
+    logical_shape = list(arr.shape)
+    if axis != 0:
+        logical_shape.insert(axis, logical_shape.pop(0))
+    idx = ShardIndex(
+        shape=tuple(logical_shape),
+        dtype=str(arr.dtype),
+        axis=axis,
+        offsets=tuple(int(b) for b in bounds),
+        files=tuple(files),
+    )
+    with open(os.path.join(dirpath, INDEX_NAME), "w") as f:
+        f.write(idx.to_json())
+    return idx
+
+
+def load_index(dirpath: str) -> ShardIndex:
+    with open(os.path.join(dirpath, INDEX_NAME)) as f:
+        return ShardIndex.from_json(f.read())
+
+
+def read_slice(dirpath: str, start: int, stop: int, index: Optional[ShardIndex] = None) -> np.ndarray:
+    """Read rows [start, stop) along the shard axis, touching only the shards
+    that overlap — the elastic-restore primitive."""
+    idx = index or load_index(dirpath)
+    n = idx.shape[idx.axis] if idx.axis < len(idx.shape) else idx.offsets[-1]
+    start, stop = max(0, start), min(stop, idx.offsets[-1])
+    if stop <= start:
+        inner = list(idx.shape)
+        inner[idx.axis if idx.axis == 0 else 0] = 0
+        return np.empty((0,) + tuple(idx.shape[1:]), dtype=np.dtype(idx.dtype))
+    del n
+    pieces: List[np.ndarray] = []
+    offs = idx.offsets
+    for i, fname in enumerate(idx.files):
+        lo, hi = offs[i], offs[i + 1]
+        if hi <= start or lo >= stop:
+            continue
+        a, b = max(start, lo) - lo, min(stop, hi) - lo
+        pieces.append(np.asarray(raio.memmap_slice(os.path.join(dirpath, fname), a, b)))
+    out = pieces[0] if len(pieces) == 1 else np.concatenate(pieces, axis=0)
+    if idx.axis != 0:
+        out = np.moveaxis(out, 0, idx.axis)
+    return out
+
+
+def read_sharded(dirpath: str) -> np.ndarray:
+    idx = load_index(dirpath)
+    return read_slice(dirpath, 0, idx.offsets[-1], idx)

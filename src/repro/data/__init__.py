@@ -1,0 +1,15 @@
+"""RawArray-backed data pipeline (the paper's contribution as the loader)."""
+
+from .dataset import RaDataset, RaDatasetWriter, dataset_manifest
+from .loader import DataLoader, LoaderState
+from .synth import make_image_dataset, make_token_dataset
+
+__all__ = [
+    "RaDataset",
+    "RaDatasetWriter",
+    "dataset_manifest",
+    "DataLoader",
+    "LoaderState",
+    "make_token_dataset",
+    "make_image_dataset",
+]

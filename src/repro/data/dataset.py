@@ -1,0 +1,171 @@
+"""RawArray shard-directory datasets.
+
+Layout — exactly the paper's archival vision (§1: "metadata as human-
+readable markup, raw data in RawArray files, organized by a file system
+directory structure")::
+
+    <root>/
+      manifest.json             {"fields": {"tokens": {"dtype": "uint32",
+                                 "shape": [1024]}, ...},
+                                 "shards": [{"files": {"tokens":
+                                 "tokens_00000.ra"}, "rows": 8192}, ...]}
+      tokens_00000.ra           (rows, *field_shape) RawArray
+      tokens_00001.ra           ...
+
+Every shard file is an independent, memory-mappable RawArray; a reader
+needs only offset arithmetic to fetch any row range of any field — this is
+what makes multi-host sharded reads and exact-resume trivial.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .. import core as ra
+
+MANIFEST = "manifest.json"
+
+
+def dataset_manifest(root: str) -> Dict[str, Any]:
+    with open(os.path.join(root, MANIFEST)) as f:
+        return json.load(f)
+
+
+class RaDatasetWriter:
+    """Streaming writer: append row batches, shards roll at ``shard_rows``."""
+
+    def __init__(self, root: str, fields: Dict[str, Tuple[Tuple[int, ...], str]], shard_rows: int = 8192):
+        self.root = root
+        self.fields = fields  # name -> (row_shape, dtype)
+        self.shard_rows = shard_rows
+        self._buf: Dict[str, List[np.ndarray]] = {k: [] for k in fields}
+        self._buffered = 0
+        self._shards: List[Dict[str, Any]] = []
+        os.makedirs(root, exist_ok=True)
+
+    def append(self, **arrays: np.ndarray) -> None:
+        n = None
+        for name, (shape, dtype) in self.fields.items():
+            a = np.asarray(arrays[name])
+            assert a.shape[1:] == tuple(shape), f"{name}: {a.shape} vs {shape}"
+            n = a.shape[0] if n is None else n
+            assert a.shape[0] == n
+            self._buf[name].append(a.astype(dtype, copy=False))
+        self._buffered += n
+        while self._buffered >= self.shard_rows:
+            self._flush(self.shard_rows)
+
+    def _flush(self, rows: int) -> None:
+        if rows == 0:
+            return
+        idx = len(self._shards)
+        files = {}
+        for name in self.fields:
+            buf = np.concatenate(self._buf[name], axis=0)
+            take, rest = buf[:rows], buf[rows:]
+            self._buf[name] = [rest] if rest.size else []
+            fname = f"{name}_{idx:05d}.ra"
+            ra.write(os.path.join(self.root, fname), take)
+            files[name] = fname
+        self._shards.append({"files": files, "rows": rows})
+        self._buffered -= rows
+
+    def finish(self, metadata: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        if self._buffered:
+            self._flush(self._buffered)
+        man = {
+            "format": "rawarray-dataset-v1",
+            "fields": {
+                k: {"shape": list(s), "dtype": str(np.dtype(d))}
+                for k, (s, d) in self.fields.items()
+            },
+            "shards": self._shards,
+            "total_rows": int(sum(s["rows"] for s in self._shards)),
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(self.root, MANIFEST), "w") as f:
+            json.dump(man, f, indent=1)
+        return man
+
+
+@dataclass
+class _Shard:
+    rows: int
+    files: Dict[str, str]
+    row_offset: int
+
+
+class RaDataset:
+    """Random-access reader over a shard directory. All reads are memory-
+    mapped row-range slices (zero decode, zero copy until touched)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        man = dataset_manifest(root)
+        if man.get("format") != "rawarray-dataset-v1":
+            raise ra.RawArrayError(f"not a RawArray dataset: {root}")
+        self.fields: Dict[str, Any] = man["fields"]
+        self.metadata = man.get("metadata", {})
+        self.shards: List[_Shard] = []
+        off = 0
+        for s in man["shards"]:
+            self.shards.append(_Shard(rows=s["rows"], files=s["files"], row_offset=off))
+            off += s["rows"]
+        self.total_rows = off
+        self._mmaps: Dict[Tuple[int, str], np.ndarray] = {}
+
+    def __len__(self) -> int:
+        return self.total_rows
+
+    def _mmap(self, shard_idx: int, field: str) -> np.ndarray:
+        key = (shard_idx, field)
+        if key not in self._mmaps:
+            path = os.path.join(self.root, self.shards[shard_idx].files[field])
+            self._mmaps[key] = ra.memmap(path)
+        return self._mmaps[key]
+
+    def rows(self, start: int, stop: int, fields: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+        """Read global rows [start, stop) across shard boundaries."""
+        fields = list(fields or self.fields)
+        out: Dict[str, List[np.ndarray]] = {f: [] for f in fields}
+        for i, sh in enumerate(self.shards):
+            lo, hi = sh.row_offset, sh.row_offset + sh.rows
+            if hi <= start or lo >= stop:
+                continue
+            a, b = max(start, lo) - lo, min(stop, hi) - lo
+            for f in fields:
+                out[f].append(np.asarray(self._mmap(i, f)[a:b]))
+        return {
+            f: (v[0] if len(v) == 1 else np.concatenate(v, axis=0)) for f, v in out.items()
+        }
+
+    def gather(self, indices: np.ndarray, fields: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+        """Gather arbitrary global rows (shuffled access)."""
+        fields = list(fields or self.fields)
+        indices = np.asarray(indices)
+        bounds = np.array([s.row_offset for s in self.shards] + [self.total_rows])
+        shard_of = np.searchsorted(bounds, indices, side="right") - 1
+        out: Dict[str, np.ndarray] = {}
+        for f in fields:
+            field_info = self.fields[f]
+            sample = np.empty(
+                (len(indices),) + tuple(field_info["shape"]), dtype=field_info["dtype"]
+            )
+            for si in np.unique(shard_of):
+                mask = shard_of == si
+                local = indices[mask] - self.shards[si].row_offset
+                sample[mask] = self._mmap(int(si), f)[local]
+            out[f] = sample
+        return out
+
+    def host_range(self, host_id: int, host_count: int) -> Tuple[int, int]:
+        """Contiguous row range owned by this host (multi-host sharding)."""
+        per = self.total_rows // host_count
+        start = host_id * per
+        stop = start + per if host_id < host_count - 1 else self.total_rows
+        return start, stop

@@ -1,0 +1,234 @@
+"""Parameter partition specs: param-tree path -> PartitionSpec.
+
+Strategy (DESIGN.md §3):
+
+* dense archs — Megatron TP over ``model`` (attention fused-head dims, MLP
+  d_ff, vocab), params replicated over ``data`` (their optimizer state too);
+* MoE giants — TP over ``model`` **plus** FSDP over ``data`` on the d_model
+  axis (ZeRO-3): XLA all-gathers each scanned layer's weights on entry,
+  keeping per-chip bytes ≈ params/(16·16);
+* every spec is divisibility-checked against the mesh and falls back to
+  less-sharded alternatives, so awkward dims (qwen's 40 heads) degrade
+  gracefully instead of failing to lower.
+
+Leading scan (layer-stack) axes are never sharded.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+def _axis_size(mesh_shape: Dict[str, int], axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def _fits(shape: Tuple[int, ...], spec: Sequence, mesh_shape: Dict[str, int]) -> bool:
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            continue
+        if dim % _axis_size(mesh_shape, axes) != 0:
+            return False
+    return True
+
+
+def _choose(shape, candidates, mesh_shape) -> P:
+    """First candidate spec that divides evenly; final fallback replicated."""
+    for cand in candidates:
+        cand = tuple(cand) + (None,) * (len(shape) - len(cand))
+        if _fits(shape, cand, mesh_shape):
+            return P(*cand)
+    return P(*([None] * len(shape)))
+
+
+# Rules: (path regex, candidate specs for the *trailing* named dims).
+# 'F' = fsdp axis placeholder (resolved to 'data' for fsdp trees, else None).
+def _rules(fsdp: bool):
+    F = "data" if fsdp else None
+    return [
+        # embeddings / heads
+        (r"embed$", [("model", F), ("model", None), (None, None)]),
+        (r"lm_head$", [(F, "model"), (None, "model"), (None, None)]),
+        (r"(enc_pos|dec_pos)$", [(None, "model"), (None, None)]),
+        (r"mm_proj$", [(F, "model"), (None, "model")]),
+        # attention (d, H, hd) / (H, hd, d)
+        (r"attn/w[qkv]$", [(F, "model", None), (None, "model", None), (None, None, "model"), (F, None, None)]),
+        (r"attn/wo$", [("model", None, F), ("model", None, None), (None, "model", None), (None, None, F)]),
+        (r"attn/b[qkv]$", [("model", None), (None, None)]),
+        (r"attn/bo$", [(None,)]),
+        # MLA
+        (r"attn/wq_a$", [(F, "model"), (None, "model")]),
+        (r"attn/wq_b$", [(None, "model", None), ("model", None, None)]),
+        (r"attn/wkv_a$", [(F, "model"), (None, "model"), (F, None)]),
+        (r"attn/wkv_b$", [(None, "model", None)]),
+        # MLP (d, ff) / (ff, d)
+        (r"(mlp|ffn)/w_(up|gate)$", [(F, "model"), (None, "model")]),
+        (r"(mlp|ffn)/w_down$", [("model", F), ("model", None)]),
+        (r"(mlp|ffn)/w1$", [(F, "model"), (None, "model")]),
+        (r"(mlp|ffn)/w2$", [("model", F), ("model", None)]),
+        # MoE
+        (r"ffn/router$", [(F, "model"), (None, "model"), (None, None)]),
+        (r"ffn/w_(gate|up)$", [("model", F, None), ("model", None, None)]),  # (E, d, ffe)
+        (r"ffn/shared_(gate|up)$", [(F, "model"), (None, "model")]),
+        (r"ffn/shared_down$", [("model", F), ("model", None)]),
+        # Mamba2
+        (r"ssm/w_(z|x)$", [(F, "model"), (None, "model")]),
+        (r"ssm/w_(B|C|dt)$", [(F, "model"), (None, "model"), (F, None), (None, None)]),
+        (r"ssm/conv_._w$", [("model", None), (None, None)]),
+        (r"ssm/conv_._b$", [("model",), (None,)]),
+        (r"ssm/norm$", [("model",), (None,)]),
+        (r"ssm/out_proj$", [("model", F), ("model", None)]),
+        # zamba shared block
+        (r"shared/out_proj$", [("model", F), ("model", None)]),
+        (r"shared/mlp/w_(up|gate)$", [(F, "model"), (None, "model")]),
+        (r"shared/mlp/w_down$", [("model", F), ("model", None)]),
+        # mtp projection
+        (r"mtp/proj$", [(F, "model"), (None, "model")]),
+        # norms & 1-d leftovers: replicated
+        (r".*", [()]),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(
+    params_shape: Any,
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    n_scan_dims: int = 1,
+    strategy: str = "tp",
+) -> Any:
+    """Build a PartitionSpec tree matching ``params_shape`` (a ShapeDtypeStruct
+    tree from ``jax.eval_shape``).
+
+    strategy='tp' (default): Megatron TP over 'model' (+FSDP for MoE giants).
+    strategy='dp': pure data parallelism — params REPLICATED (batch shards
+    over both mesh axes); pair with ``zero1_moment_specs`` so optimizer
+    state shards ZeRO-1 style. Wins for small models where TP's activation
+    all-reduces dominate (see EXPERIMENTS.md §Perf / olmo hillclimb).
+    """
+    mesh_shape = dict(mesh.shape)
+    if strategy == "dp":
+        return jax.tree_util.tree_map(
+            lambda l: P(*([None] * len(l.shape))), params_shape
+        )
+    fsdp = bool(cfg.moe and cfg.moe.n_experts) and cfg.param_dtype != "float32"
+    rules = _rules(fsdp)
+
+    # layer stacks have a leading scan dim; detect by path prefix
+    stack_prefixes = ("dense_layers", "moe_layers", "layers", "enc_layers", "dec_layers")
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        lead = 1 if ps.startswith(stack_prefixes) else 0
+        trail = shape[lead:]
+        for pat, candidates in rules:
+            if re.search(pat, ps):
+                sp = _choose(trail, candidates, mesh_shape)
+                return P(*((None,) * lead + tuple(sp)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def opt_state_specs(opt_state_shape: Any, pspecs: Any) -> Any:
+    """Optimizer state shards like its parameter. Quantized moments ({"q",
+    "scale"}) inherit the param spec ("q" same rank; "scale" drops the last
+    dim's sharding)."""
+
+    def like(param_spec: P, leaf_shape) -> P:
+        sp = tuple(param_spec)
+        rank = len(leaf_shape.shape)
+        if rank == len(sp):
+            return P(*sp)
+        if rank == len(sp) + 1:  # blockwise scale: (..., nblocks) - keep prefix
+            return P(*(sp[:-1] + (None, None))[:rank])
+        if rank < len(sp):
+            return P(*sp[:rank])
+        return P(*(sp + (None,) * (rank - len(sp))))
+
+    def map_state(state, specs):
+        if isinstance(state, dict) and set(state.keys()) == {"q", "scale"}:
+            sp = tuple(specs)
+            # scale has shape param.shape[:-1] + (nblocks,): keep the prefix
+            # sharding, never shard the block-count dim
+            scale_spec = P(*(sp[:-1] + (None,))) if sp else P(None)
+            return {"q": like(specs, state["q"]), "scale": scale_spec}
+        if isinstance(state, dict):
+            raise TypeError("unexpected dict in moment tree")
+        return like(specs, state)
+
+    import jax.tree_util as jtu
+
+    m = jtu.tree_map(
+        map_state,
+        opt_state_shape["m"],
+        pspecs,
+        is_leaf=lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "scale"},
+    )
+    v = jtu.tree_map(
+        map_state,
+        opt_state_shape["v"],
+        pspecs,
+        is_leaf=lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "scale"},
+    )
+    return {"step": P(), "m": m, "v": v}
+
+
+def zero1_moment_specs(opt_state_shape: Any, mesh: Mesh) -> Any:
+    """ZeRO-1: shard each moment leaf on its largest evenly-divisible dim
+    (layer-stack dims split over 'data', vocab-sized dims over 'model');
+    params stay replicated — XLA inserts reduce-scatter(grads) +
+    all-gather(updated params) automatically."""
+    mesh_shape = dict(mesh.shape)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        for axes in (("data",), ("model",), ("data", "model")):
+            n = 1
+            for a in axes:
+                n *= mesh_shape.get(a, 1)
+            for i, dim in enumerate(shape):
+                if dim % n == 0 and dim >= n:
+                    return P(*(axes if j == i else None for j in range(len(shape))))
+        return P(*([None] * len(shape)))
+
+    def map_state(state):
+        if isinstance(state, dict) and set(state.keys()) == {"q", "scale"}:
+            return {"q": spec(state["q"]), "scale": spec(state["scale"])}
+        return spec(state)
+
+    import jax.tree_util as jtu
+
+    is_q = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+    return {
+        "step": P(),
+        "m": jtu.tree_map(map_state, opt_state_shape["m"], is_leaf=is_q),
+        "v": jtu.tree_map(map_state, opt_state_shape["v"], is_leaf=is_q),
+    }

@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules (MaxText-style) + constraint helper.
+
+Models annotate activations with *logical* axis names; the active rule set
+maps names to mesh axes. Outside a rule context `constrain` is a no-op, so
+model code runs unmodified on a single CPU device (smoke tests).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def use_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    old_r, old_m = _rules(), _mesh()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old_r, old_m
+
+
+def spec_for(*names: Optional[str]) -> P:
+    """Build a PartitionSpec from logical axis names under the active rules."""
+    rules = _rules() or {}
+    axes = []
+    for n in names:
+        a = rules.get(n) if n else None
+        axes.append(a)
+    return P(*axes)
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, str):
+        return shape.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= shape.get(a, 1)
+    return n
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without rules.
+    Axes that don't divide the dimension are dropped (graceful degradation
+    for awkward dims, e.g. capacity=5 over data=16)."""
+    rules = _rules()
+    if rules is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"constrain: {len(names)} names for rank-{x.ndim} array")
+    spec = spec_for(*names)
+    mesh = _mesh()
+    if mesh is not None:
+        axes = [
+            a if (a is None or x.shape[i] % _axis_size(mesh, a) == 0) else None
+            for i, a in enumerate(spec)
+        ]
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*axes)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------- rule sets
+def train_rules(multi_pod: bool, strategy: str = "tp") -> Dict[str, MeshAxes]:
+    if strategy == "dp":
+        # pure DP: batch over every non-pod axis; no tensor sharding at all
+        batch = ("data", "model")
+        return {k: None for k in (
+            "seq", "act_seq", "embed", "heads", "kv_heads", "head_dim",
+            "qkv_fused", "ff", "vocab", "experts", "expert_cap", "moe_rows",
+            "moe_routes", "kv_seq", "ssm_heads", "state", "lora", "conv_dim",
+        )} | {"batch": batch}
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        # Megatron-style sequence parallelism at residual-stream save points:
+        # shards the per-layer remat carries 16x over 'model'
+        "act_seq": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,        # kv heads usually < model size; GSPMD decides
+        "head_dim": None,
+        "qkv_fused": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_cap": "data",
+        "moe_rows": ("data", "model") if not multi_pod else ("pod", "data", "model"),
+        "moe_routes": ("data", "model") if not multi_pod else ("pod", "data", "model"),
+        "kv_seq": None,
+        "ssm_heads": "model",
+        "state": None,
+        "lora": None,
+        "conv_dim": "model",
+    }
+
+
+def decode_rules(multi_pod: bool, *, shard_kv_seq: bool = False) -> Dict[str, MeshAxes]:
+    r = train_rules(multi_pod)
+    if shard_kv_seq:
+        # context parallelism: long_500k (batch=1) shards the KV/state length
+        r["kv_seq"] = ("pod", "data") if multi_pod else ("data",)
+        r["batch"] = None
+    return r

@@ -1,0 +1,228 @@
+"""jit-able train / prefill / decode steps with full sharding plumbing.
+
+``make_*_step`` returns (fn, in_shardings, out_shardings) ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(...)`` — used both
+by the real training loop (CPU-scale) and the multi-pod dry-run (AOT).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.shapes import ShapeSpec
+from ..models.config import ModelConfig
+from . import optimizer as optim
+from .partition import opt_state_specs, param_specs
+from .sharding import decode_rules, train_rules, use_rules
+
+Tree = Any
+
+
+def _named(mesh: Mesh, tree_of_specs: Tree) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, multi_pod: bool) -> Dict[str, P]:
+    b = None if shape.context_parallel else (("pod", "data") if multi_pod else ("data",))
+    specs: Dict[str, P] = {"tokens": P(b, None)}
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        specs["patch_embeds"] = P(b, None, None)
+    if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+        specs["frames"] = P(b, None, None)
+    return specs
+
+
+def cache_spec_tree(cache_shape: Tree, shape: ShapeSpec, mesh: Mesh, multi_pod: bool) -> Tree:
+    """PartitionSpec tree for a KV/state cache, by leaf name + divisibility."""
+    mesh_shape = dict(mesh.shape)
+    if shape.context_parallel:
+        batch_ax = None
+        seq_ax: Any = ("pod", "data", "model") if multi_pod else ("data", "model")
+    else:
+        batch_ax = ("pod", "data") if multi_pod else ("data",)
+        seq_ax = "model"
+
+    def ax_size(a):
+        if a is None:
+            return 1
+        if isinstance(a, str):
+            return mesh_shape.get(a, 1)
+        n = 1
+        for x in a:
+            n *= mesh_shape.get(x, 1)
+        return n
+
+    def leaf_spec(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        shp = tuple(leaf.shape)
+        if name == "pos":
+            return P()
+        def div(dim_idx, ax):
+            return ax is not None and shp[dim_idx] % ax_size(ax) == 0
+        if name in ("k", "v", "ck", "cv"):  # (L, B, KV, S, hd)
+            kv_ax = "model" if (seq_ax != "model" and div(2, "model")) else None
+            s_ax = seq_ax if div(3, seq_ax) else None
+            if kv_ax == "model" and s_ax and "model" in (s_ax if isinstance(s_ax, tuple) else (s_ax,)):
+                kv_ax = None
+            return P(None, batch_ax if div(1, batch_ax) else None, kv_ax, s_ax, None)
+        if name in ("latent", "k_rope"):  # (L, B, S, r)
+            return P(None, batch_ax if div(1, batch_ax) else None,
+                     seq_ax if div(2, seq_ax) else None, None)
+        if name == "ssm":  # (L, B, H, P, N)
+            return P(None, batch_ax if div(1, batch_ax) else None,
+                     "model" if div(2, "model") else None, None, None)
+        if name.startswith("conv"):  # (L, B, W-1, C)
+            return P(None, batch_ax if div(1, batch_ax) else None, None,
+                     "model" if div(3, "model") else None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+# -------------------------------------------------------------------- train
+def make_train_step(
+    model,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    *,
+    multi_pod: bool = False,
+    adamw: Optional[optim.AdamWConfig] = None,
+    microbatches: int = 1,
+    strategy: str = "tp",
+    grad_dtype: Optional[str] = None,
+    moe_ep: bool = False,
+):
+    """Returns (step_fn, (param_sh, opt_sh, batch_sh), out_shardings)."""
+    cfg = model.cfg
+    adamw = adamw or optim.AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+    rules = dict(train_rules(multi_pod, strategy))
+    if moe_ep:
+        rules["_moe_ep"] = True
+    grad_shard_like = None  # set below for dp/zero1
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules, mesh):
+            def loss_fn(p, b):
+                return model.train_loss(p, b)
+
+            if microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch
+                )
+            else:
+                k = microbatches
+
+                def resh(x):
+                    return x.reshape(k, x.shape[0] // k, *x.shape[1:])
+
+                mb = jax.tree_util.tree_map(resh, batch)
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+
+                def body(acc, b):
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+                    gacc, lacc = acc
+                    gacc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32), gacc, g
+                    )
+                    return (gacc, lacc + l), m
+
+                (grads, loss_sum), ms = jax.lax.scan(body, (zeros, jnp.zeros(())), mb)
+                grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+                loss = loss_sum / k
+                metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), ms)
+
+            if grad_dtype:
+                # cast before the cross-replica reduction: halves gradient
+                # all-reduce bytes (bf16 reduce, f32 master math in AdamW)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.dtype(grad_dtype)), grads
+                )
+            if grad_shard_like is not None:
+                # ZeRO-1 proper: pin gradients to the optimizer-shard layout
+                # so GSPMD lowers the reduction as reduce-scatter (each device
+                # receives only its moment shard) instead of all-reduce.
+                grads = jax.tree_util.tree_map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, grad_shard_like,
+                )
+            new_params, new_opt, info = optim.apply_updates(params, grads, opt_state, adamw)
+            return new_params, new_opt, {**metrics, **info}
+
+    # shardings
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(params_shape, cfg, mesh, strategy=strategy)
+    opt_shape = jax.eval_shape(lambda: optim.init_state(params_shape, adamw))
+    if strategy == "dp":
+        from .partition import zero1_moment_specs
+
+        ospecs = zero1_moment_specs(opt_shape, mesh)
+        # gradient shard layout = the fp32 moment layout (m tree minus quant dicts)
+        def _first_spec(s):
+            return s["q"] if isinstance(s, dict) else s
+        grad_shard_like = jax.tree_util.tree_map(
+            lambda spec: NamedSharding(mesh, _first_spec(spec)),
+            ospecs["m"],
+            is_leaf=lambda x: isinstance(x, P) or (isinstance(x, dict) and "q" in x),
+        )
+    else:
+        ospecs = opt_state_specs(opt_shape, pspecs)
+    bspecs = batch_specs(cfg, shape, multi_pod)
+    if strategy == "dp":
+        bspecs = {k: P(("data", "model"), *([None] * (len(v) - 1))) for k, v in bspecs.items()}
+    param_sh = _named(mesh, pspecs)
+    opt_sh = _named(mesh, ospecs)
+    batch_sh = _named(mesh, bspecs)
+    metrics_sh = NamedSharding(mesh, P())
+    in_sh = (param_sh, opt_sh, batch_sh)
+    out_sh = (param_sh, opt_sh, None)  # metrics: let XLA pick (replicated)
+    return train_step, in_sh, out_sh, (params_shape, opt_shape)
+
+
+# -------------------------------------------------------------------- serve
+def make_prefill_step(model, mesh: Mesh, shape: ShapeSpec, *, multi_pod: bool = False):
+    cfg = model.cfg
+    rules = decode_rules(multi_pod, shard_kv_seq=shape.context_parallel)
+
+    def prefill_step(params, batch):
+        with use_rules(rules, mesh):
+            return model.prefill(params, batch)
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(params_shape, cfg, mesh)
+    bspecs = batch_specs(cfg, shape, multi_pod)
+    in_sh = (_named(mesh, pspecs), _named(mesh, bspecs))
+    out_sh = None  # logits + cache: XLA propagates
+    return prefill_step, in_sh, out_sh, params_shape
+
+
+def make_decode_step(model, mesh: Mesh, shape: ShapeSpec, *, multi_pod: bool = False):
+    cfg = model.cfg
+    rules = decode_rules(multi_pod, shard_kv_seq=shape.context_parallel)
+
+    def decode_step(params, cache, tokens):
+        with use_rules(rules, mesh):
+            return model.decode_step(params, cache, tokens)
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(params_shape, cfg, mesh)
+    cache_shape = jax.eval_shape(lambda: model.empty_cache(shape.batch, shape.seq))
+    cspecs = cache_spec_tree(cache_shape, shape, mesh, multi_pod)
+    b = None if shape.context_parallel else (("pod", "data") if multi_pod else ("data",))
+    tok_sh = NamedSharding(mesh, P(b, None))
+    param_sh = _named(mesh, pspecs)
+    cache_sh = _named(mesh, cspecs)
+    in_sh = (param_sh, cache_sh, tok_sh)
+    # cache must come back with the same sharding (steady-state decode loop)
+    out_sh = (None, cache_sh)
+    return decode_step, in_sh, out_sh, (params_shape, cache_shape)

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three artifacts (per the kernel contract):
+
+* ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+  VMEM tiling (TPU is the TARGET; validated on CPU via interpret=True);
+* ``ops.py``    — jit'd public wrappers (interpret switch, shape plumbing);
+* ``ref.py``    — pure-jnp oracles the tests assert against.
+
+TPU adaptation notes (DESIGN.md §6): all tiles are (8,128)-aligned for the
+VPU/MXU; flash attention keeps the online-softmax state in VMEM scratch
+carried across the sequential KV-block grid dimension; the SSD kernel maps
+Mamba2's chunked dual form onto per-(batch, head) MXU matmuls with the
+(P, N) state carried in scratch across the chunk grid dimension.
+"""
+
+from .ops import (
+    decode_attention,
+    dequant_u8,
+    flash_attention,
+    ssd_scan,
+)
+
+__all__ = ["flash_attention", "decode_attention", "ssd_scan", "dequant_u8"]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel (independent implementations — no
+shared code with the kernels, so tests catch transcription bugs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd). Materializes SxS."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else hd**-0.5
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, pos, *, window=0, scale=None):
+    """q (B,KV,g,hd), k/v (B,KV,S,hd), pos scalar -> (B,KV,g,hd)."""
+    B, KV, g, hd = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else hd**-0.5
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)
+    ok = kpos <= pos
+    if window > 0:
+        ok &= kpos > pos - window
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dtA, Bm, Cm):
+    """Exact sequential recurrence (no chunking — the ground truth).
+
+    x (B,H,L,P), dtA (B,H,L), Bm/Cm (B,L,N) -> y (B,H,L,P)
+        h_t = exp(dtA_t) h_{t-1} + B_t ⊗ x_t ;  y_t = C_t · h_t
+    """
+    B, H, L, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, at, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        h = h * jnp.exp(at.astype(jnp.float32))[..., None, None] + (
+            xt.astype(jnp.float32)[..., None] * bt.astype(jnp.float32)[:, None, None, :]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 2, 0),
+        jnp.moveaxis(dtA, 2, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)
+
+
+def dequant_u8_ref(x, scale, bias, out_dtype=jnp.float32):
+    return (x.astype(jnp.float32) * scale[None, :] + bias[None, :]).astype(out_dtype)

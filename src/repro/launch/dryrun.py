@@ -1,0 +1,194 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (device count locks on
+first backend init). 512 virtual host devices back both the 16x16 single-pod
+mesh and the 2x16x16 multi-pod mesh.
+
+Per cell this script:
+  1. builds the production mesh and the step function with explicit
+     in/out shardings (repro.distributed.steps),
+  2. ``jax.jit(step).lower(**abstract inputs)`` — ShapeDtypeStructs only,
+     no allocation,
+  3. ``.compile()`` — proving GSPMD partitioning + collectives are coherent,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     into experiments/dryrun/<arch>__<shape>__<mesh>.json for §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+from repro.launch.hlo_analysis import collective_stats, is_async
+
+
+# ------------------------------------------------------------- dry run core
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, save: bool = True, strategy: str = "tp", tag: str = "", no_remat: bool = False, grad_dtype: str = None, head_pad: int = 0, moe_ep: bool = False) -> Dict[str, Any]:
+    from repro.configs import get_config
+    from repro.distributed.steps import make_decode_step, make_prefill_step, make_train_step
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    if no_remat:
+        cfg = cfg.with_(remat=False)
+    if head_pad:
+        cfg = cfg.with_(head_pad=head_pad)
+    shape = SHAPES[shape_name]
+    skip = cell_applicable(cfg, shape)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell_id = f"{cfg.name}__{shape.name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    if skip:
+        return {"cell": cell_id, "status": "skip", "reason": skip}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+
+    with mesh:
+        if shape.kind == "train":
+            step, in_sh, out_sh, (params_shape, opt_shape) = make_train_step(
+                model, mesh, shape, multi_pod=multi_pod, strategy=strategy,
+                grad_dtype=grad_dtype, moe_ep=moe_ep,
+            )
+            args = (params_shape, opt_shape, input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            step, in_sh, out_sh, params_shape = make_prefill_step(
+                model, mesh, shape, multi_pod=multi_pod
+            )
+            args = (params_shape, input_specs(cfg, shape))
+        else:
+            step, in_sh, out_sh, (params_shape, cache_shape) = make_decode_step(
+                model, mesh, shape, multi_pod=multi_pod
+            )
+            args = (params_shape, cache_shape, input_specs(cfg, shape)["tokens"])
+
+        donate = (0, 1) if shape.kind == "train" else ((1,) if shape.kind == "decode" else ())
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            mem_d[k] = int(getattr(mem, k, 0) or 0)
+    cost_d = {}
+    if cost:
+        for k in ("flops", "bytes accessed", "transcendentals"):
+            if k in cost:
+                cost_d[k.replace(" ", "_")] = float(cost[k])
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    n_params = int(
+        sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params_shape))
+    )
+    result = {
+        "cell": cell_id,
+        "status": "ok",
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": mesh_name,
+        "chips": int(np.prod(mesh.devices.shape)),
+        "kind": shape.kind,
+        "seq": shape.seq,
+        "batch": shape.batch,
+        "n_params": n_params,
+        "n_params_active": int(cfg.active_param_count()),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,
+        "collectives": coll,
+        "async_collectives": is_async(hlo),
+        "hlo_bytes": len(hlo),
+    }
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(OUT_DIR, cell_id + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    p.add_argument("--all", action="store_true", help="run every applicable cell")
+    p.add_argument("--print-hlo", action="store_true")
+    p.add_argument("--strategy", default="tp", choices=["tp", "dp"])
+    p.add_argument("--tag", default="")
+    p.add_argument("--no-remat", action="store_true")
+    p.add_argument("--grad-bf16", action="store_true")
+    p.add_argument("--head-pad", type=int, default=0)
+    p.add_argument("--moe-ep", action="store_true")
+    args = p.parse_args(argv)
+
+    from repro.configs import all_arch_ids, get_config
+    from repro.launch.shapes import SHAPES
+
+    archs = all_arch_ids() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = run_cell(arch, shape, mp, strategy=args.strategy, tag=args.tag,
+                                 no_remat=args.no_remat, head_pad=args.head_pad,
+                                 moe_ep=args.moe_ep,
+                                 grad_dtype="bfloat16" if args.grad_bf16 else None)
+                except Exception as e:  # noqa: BLE001 — report & continue
+                    failures += 1
+                    print(f"FAIL {arch} {shape} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+                    continue
+                if r["status"] == "skip":
+                    print(f"SKIP {r['cell']}: {r['reason']}")
+                    continue
+                ca = r["cost_analysis"]
+                print(
+                    f"OK   {r['cell']}: compile={r['compile_s']}s "
+                    f"flops={ca.get('flops', 0):.3e} "
+                    f"coll={r['collectives']['total_bytes']:.3e}B "
+                    f"temp={r['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB/dev"
+                )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

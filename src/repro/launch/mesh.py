@@ -1,0 +1,23 @@
+"""Production mesh definitions (functions, not constants — importing this
+module never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data x 16 model). Multi-pod: 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,327 @@
+"""Attention variants: GQA (chunked-causal / sliding-window / decode) and
+DeepSeek-style MLA (train + absorbed latent-cache decode).
+
+Design notes
+------------
+* Train/prefill attention is **chunked over query blocks** (online per-chunk
+  softmax over the full KV with masking) so the S×S score matrix is never
+  materialized in HBM — this is both the memory-sane lowering for the
+  dry-run and the pure-JAX reference for the Pallas flash kernel.
+* Softmax is written with explicit max/sum reductions so that when the KV
+  sequence axis is sharded (context parallelism for long_500k decode),
+  GSPMD inserts the all-reduces automatically.
+* All masks are arithmetic (no boolean control flow), so a scanned layer
+  stack can flip local/global behaviour per layer with a traced flag.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, apply_rope, rmsnorm
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- helpers
+def _mask_bias(qpos, kpos, window, is_global):
+    """(..., Sq, Sk) additive mask. window > 0 limits lookback unless
+    is_global (traced scalar 0/1) promotes the layer to full attention."""
+    causal = kpos[None, :] <= qpos[:, None]
+    ok = causal
+    if window:
+        in_window = kpos[None, :] > qpos[:, None] - window
+        full = jnp.asarray(is_global, dtype=jnp.bool_)
+        ok = causal & (in_window | full)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _softmax_last(scores: jax.Array) -> jax.Array:
+    """f32 softmax via explicit max/sum (SP/context-parallel friendly)."""
+    s = scores.astype(jnp.float32)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - jax.lax.stop_gradient(m))
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+
+def _pad_seq(x: jax.Array, axis: int, chunk: int) -> jax.Array:
+    """Zero-pad ``axis`` up to a multiple of ``chunk`` (query-chunk padding;
+    padded rows are sliced off after the scan so values are don't-cares)."""
+    S = x.shape[axis]
+    pad = (-S) % chunk
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ----------------------------------------------------------------- GQA init
+def init_gqa(ini: Initializer, cfg: ModelConfig, path: str = "attn") -> Dict[str, Any]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Hp = H + cfg.head_pad
+    wq = ini.fanin(f"{path}.wq", (d, Hp, hd))
+    wo = ini.fanin(f"{path}.wo", (Hp, hd, d))
+    if cfg.head_pad:
+        # zero the padded head slices: padded heads contribute exactly 0 to
+        # the output AND receive exactly 0 gradient (wo rows are zero), so
+        # the padded model is numerically identical to the unpadded one.
+        import jax.numpy as _jnp
+
+        wq = wq.at[:, H:, :].set(0)
+        wo = wo.at[H:, :, :].set(0)
+    p: Dict[str, Any] = {
+        "wq": wq,
+        "wk": ini.fanin(f"{path}.wk", (d, KV, hd)),
+        "wv": ini.fanin(f"{path}.wv", (d, KV, hd)),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ini.zeros(f"{path}.bq", (Hp, hd))
+        p["bk"] = ini.zeros(f"{path}.bk", (KV, hd))
+        p["bv"] = ini.zeros(f"{path}.bv", (KV, hd))
+    if cfg.qk_norm:
+        p["q_norm"] = ini.zeros(f"{path}.q_norm", (hd,))
+        p["k_norm"] = ini.zeros(f"{path}.k_norm", (hd,))
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, rope_theta):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_attention(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (S,)
+    is_global=1,
+    rope_theta: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Training / prefill attention. Returns (B, S, d)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads + cfg.head_pad, cfg.n_kv_heads, cfg.head_dim
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    q, k, v = _project_qkv(p, x, cfg, positions, theta)
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, S)
+    q = _pad_seq(q, 2, chunk)
+    qpos_all = _pad_seq(positions, 0, chunk)
+    Sp = q.shape[2]
+    q = q.reshape(B, KV, g, Sp, hd)
+    n_chunks = Sp // chunk
+    kpos = positions
+
+    def body(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=3)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, i * chunk, chunk, axis=0)
+        scores = jnp.einsum("bkgcd,bksd->bkgcs", qi, k) * scale
+        bias = _mask_bias(qpos, kpos, cfg.sliding_window, is_global)
+        probs = _softmax_last(scores + bias).astype(x.dtype)
+        out = jnp.einsum("bkgcs,bksd->bkgcd", probs, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, KV, g, chunk, hd) -> (B, Sp, H, hd) -> slice S
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, g, Sp, hd)[:, :, :, :S].reshape(B, H, S, hd)
+    out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out
+
+
+def gqa_prefill(
+    p, x, cfg: ModelConfig, *, positions, is_global=1, rope_theta=None, chunk: int = 512
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: same as train attention but also returns the KV cache."""
+    B, S, d = x.shape
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    q, k, v = _project_qkv(p, x, cfg, positions, theta)
+    H, KV, hd = cfg.n_heads + cfg.head_pad, cfg.n_kv_heads, cfg.head_dim
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, S)
+    q = _pad_seq(q, 2, chunk)
+    qpos_all = _pad_seq(positions, 0, chunk)
+    Sp = q.shape[2]
+    q = q.reshape(B, KV, g, Sp, hd)
+    n_chunks = Sp // chunk
+
+    def body(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=3)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, i * chunk, chunk, axis=0)
+        scores = jnp.einsum("bkgcd,bksd->bkgcs", qi, k) * scale
+        bias = _mask_bias(qpos, positions, cfg.sliding_window, is_global)
+        probs = _softmax_last(scores + bias).astype(x.dtype)
+        out = jnp.einsum("bkgcs,bksd->bkgcd", probs, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, g, Sp, hd)[:, :, :, :S].reshape(B, H, S, hd)
+    out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict[str, jax.Array],  # k/v: (B, KV, S, hd)
+    pos: jax.Array,  # scalar current position (tokens < pos are valid)
+    cfg: ModelConfig,
+    *,
+    is_global=1,
+    rope_theta: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. Returns (out (B,1,d), updated cache)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads + cfg.head_pad, cfg.n_kv_heads, cfg.head_dim
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=2)
+    g = H // KV
+    q = q.reshape(B, KV, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", q, k.astype(q.dtype)) * scale
+    S = k.shape[2]
+    kpos = jnp.arange(S)
+    valid = kpos <= pos
+    if cfg.sliding_window:
+        in_window = kpos > pos - cfg.sliding_window
+        full = jnp.asarray(is_global, dtype=jnp.bool_)
+        valid = valid & (in_window | full)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = _softmax_last(scores).astype(x.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v.astype(x.dtype))
+    out = out.reshape(B, H, hd)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))[:, None, :]
+    return out, {"k": k, "v": v}
+
+
+# ----------------------------------------------------------------- MLA
+def init_mla(ini: Initializer, cfg: ModelConfig, path: str = "attn") -> Dict[str, Any]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ini.fanin(f"{path}.wq_a", (d, m.q_lora_rank)),
+        "q_norm": ini.zeros(f"{path}.q_norm", (m.q_lora_rank,)),
+        "wq_b": ini.fanin(f"{path}.wq_b", (m.q_lora_rank, H, qk)),
+        "wkv_a": ini.fanin(f"{path}.wkv_a", (d, m.kv_lora_rank + m.qk_rope_head_dim)),
+        "kv_norm": ini.zeros(f"{path}.kv_norm", (m.kv_lora_rank,)),
+        "wkv_b": ini.fanin(
+            f"{path}.wkv_b", (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+        ),
+        "wo": ini.fanin(f"{path}.wo", (H, m.v_head_dim, d)),
+    }
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    """Returns q (B,H,S,qk), latent (B,S,r), k_rope (B,1,S,rope)."""
+    m = cfg.mla
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype))
+    q = rmsnorm(q, p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bhsk", q, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    latent = rmsnorm(latent, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # (B,1,S,rope)
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_attention(
+    p, x, cfg: ModelConfig, *, positions, chunk: int = 512, with_cache: bool = False
+):
+    """Train/prefill MLA attention (expanded form). Optionally returns the
+    latent cache (what deepseek decode actually stores)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhk->bhsk", latent, p["wkv_b"].astype(x.dtype))
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, H, S, m.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    chunk = min(chunk, S)
+    q = _pad_seq(q, 2, chunk)
+    qpos_all = _pad_seq(positions, 0, chunk)
+    Sp = q.shape[2]
+    n_chunks = Sp // chunk
+
+    def body(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=2)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, i * chunk, chunk, axis=0)
+        scores = jnp.einsum("bhcd,bhsd->bhcs", qi, k) * scale
+        bias = _mask_bias(qpos, positions, 0, 1)
+        probs = _softmax_last(scores + bias).astype(x.dtype)
+        return carry, jnp.einsum("bhcs,bhsd->bhcd", probs, v)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Sp, m.v_head_dim)[:, :, :S]
+    out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if with_cache:
+        return out, {"latent": latent, "k_rope": k_rope[:, 0]}
+    return out
+
+
+def mla_decode(
+    p,
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict[str, jax.Array],  # latent (B,S,r), k_rope (B,S,rope)
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-matmul MLA decode: attention runs in the latent space, so the
+    per-token cache is only r + rope_dim floats (the paper's MLA win)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, x, cfg, positions)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), pos, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, 0].astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    # absorb W^kv_b (k part) into q: q_lat (B,H,r)
+    wkv_k = p["wkv_b"][:, :, : m.qk_nope_head_dim].astype(x.dtype)  # (r,H,nope)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, :, 0], wkv_k)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, latent.astype(x.dtype))
+    scores = scores + jnp.einsum("bhk,bsk->bhs", q_rope[:, :, 0], k_rope.astype(x.dtype))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    S = latent.shape[1]
+    valid = jnp.arange(S) <= pos
+    scores = jnp.where(valid[None, None, :], scores * scale, NEG_INF)
+    probs = _softmax_last(scores).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, latent.astype(x.dtype))  # (B,H,r)
+    # absorb W^kv_b (v part) then output proj
+    wkv_v = p["wkv_b"][:, :, m.qk_nope_head_dim :].astype(x.dtype)  # (r,H,v)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wkv_v)
+    out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(x.dtype))[:, None, :]
+    return out, {"latent": latent, "k_rope": k_rope}

@@ -1,0 +1,33 @@
+"""Dense (gated) MLP blocks."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, activation
+from .config import ModelConfig
+
+
+def init_mlp(ini: Initializer, cfg: ModelConfig, path: str = "mlp", d_ff: int = 0) -> Dict[str, Any]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "w_up": ini.fanin(f"{path}.w_up", (d, ff)),
+        "w_down": ini.fanin(f"{path}.w_down", (ff, d)),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = ini.fanin(f"{path}.w_gate", (d, ff))
+    return p
+
+
+def mlp(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = activation(cfg.mlp_act)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if cfg.mlp_gated:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

@@ -1,0 +1,221 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+Implements the SSD chunked algorithm (arXiv:2405.21060): within a chunk the
+quadratic "attention-like" form runs on the MXU; across chunks a small
+(H, P, N) state is carried by `lax.scan`. Recurrence convention::
+
+    h_t = exp(dt_t · A_h) · h_{t-1} + B_t ⊗ (dt_t · x_t)
+    y_t = C_t · h_t + D_h · x_t
+
+Decode is a constant-time state update — the reason long_500k decode is
+trivially cheap for SSM archs (no KV growth).
+
+Sharding note: the canonical fused ``in_proj`` (z|x|B|C|dt) is split into
+separate projections here so each output dim can be model-sharded without
+resharding at the split boundaries (depthwise conv is per-channel, so
+per-component convs are mathematically identical to the fused one).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, rmsnorm
+from .config import ModelConfig
+
+
+def init_mamba(ini: Initializer, cfg: ModelConfig, path: str = "ssm") -> Dict[str, Any]:
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.n_ssm_heads
+    G, N, W = s.n_groups, s.d_state, s.conv_width
+    GN = G * N
+    return {
+        "w_z": ini.fanin(f"{path}.w_z", (d, di)),
+        "w_x": ini.fanin(f"{path}.w_x", (d, di)),
+        "w_B": ini.fanin(f"{path}.w_B", (d, GN)),
+        "w_C": ini.fanin(f"{path}.w_C", (d, GN)),
+        "w_dt": ini.fanin(f"{path}.w_dt", (d, H)),
+        "conv_x_w": ini.normal(f"{path}.conv_x_w", (di, W), scale=0.1),
+        "conv_x_b": ini.zeros(f"{path}.conv_x_b", (di,)),
+        "conv_B_w": ini.normal(f"{path}.conv_B_w", (GN, W), scale=0.1),
+        "conv_B_b": ini.zeros(f"{path}.conv_B_b", (GN,)),
+        "conv_C_w": ini.normal(f"{path}.conv_C_w", (GN, W), scale=0.1),
+        "conv_C_b": ini.zeros(f"{path}.conv_C_b", (GN,)),
+        "A_log": ini.value(f"{path}.A_log", jnp.log(jnp.linspace(1.0, 16.0, H))),
+        "D": ini.ones(f"{path}.D", (H,)),
+        "dt_bias": ini.zeros(f"{path}.dt_bias", (H,)),
+        "norm": ini.zeros(f"{path}.norm", (di,)),
+        "out_proj": ini.fanin(f"{path}.out_proj", (di, d)),
+    }
+
+
+def _proj(p, x, cfg: ModelConfig):
+    """Returns (z, x_in, B_in, C_in, dt) — pre-conv."""
+    w = lambda name: p[name].astype(x.dtype)
+    z = jnp.einsum("bsd,dk->bsk", x, w("w_z"))
+    xi = jnp.einsum("bsd,dk->bsk", x, w("w_x"))
+    Bi = jnp.einsum("bsd,dk->bsk", x, w("w_B"))
+    Ci = jnp.einsum("bsd,dk->bsk", x, w("w_C"))
+    dt = jnp.einsum("bsd,dk->bsk", x, w("w_dt"))
+    return z, xi, Bi, Ci, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x (B,S,C), w (C,W)."""
+    B, S, C = x.shape
+    W = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i : i + S, :] * w[:, i].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _conv_step(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """window (B, W, C) -> (B, C): one causal-conv output."""
+    out = jnp.sum(window * w.T[None].astype(window.dtype), axis=1)
+    return jax.nn.silu(out + b.astype(window.dtype))
+
+
+def ssd_chunked(
+    u: jax.Array,     # (B, L, H, P)   inputs already scaled by dt
+    dtA: jax.Array,   # (B, L, H)      per-step log decay (dt * A, negative)
+    Bm: jax.Array,    # (B, L, N)      input matrix (n_groups=1)
+    Cm: jax.Array,    # (B, L, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, P = u.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"L={L} not divisible by chunk={Q}"
+    nc = L // Q
+    ur = u.reshape(B, nc, Q, H, P)
+    Ar = dtA.reshape(B, nc, Q, H)
+    Br = Bm.reshape(B, nc, Q, N)
+    Cr = Cm.reshape(B, nc, Q, N)
+
+    Acs = jnp.cumsum(Ar.astype(jnp.float32), axis=2)  # (B,nc,Q,H)
+    # intra-chunk: Y_diag[i] = sum_{j<=i} (C_i·B_j) exp(Acs_i - Acs_j) u_j
+    diff = Acs[:, :, :, None, :] - Acs[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    # mask BEFORE exp: upper-triangle diffs are positive and exp overflows to
+    # inf, whose 0·inf VJP poisons the whole backward pass
+    diff = jnp.where(tri[None, None, :, :, None], diff, -1e9)
+    L_mat = jnp.exp(diff).astype(u.dtype)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # (B,nc,Q,Q)
+    Y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L_mat, ur)
+
+    # end-of-chunk states: sum_j exp(Acs_last - Acs_j) B_j u_j
+    decay_states = jnp.exp(Acs[:, :, -1:, :] - Acs).astype(u.dtype)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Br, decay_states, ur)
+
+    chunk_decay = jnp.exp(Acs[:, :, -1, :]).astype(u.dtype)  # (B,nc,H)
+
+    def body(s, inp):
+        st_c, dec_c = inp  # (B,H,P,N), (B,H)
+        prev = s
+        s = s * dec_c[:, :, None, None] + st_c
+        return s, prev
+
+    s0 = jnp.zeros((B, H, P, N), dtype=u.dtype) if h0 is None else h0.astype(u.dtype)
+    final, prev_states = jax.lax.scan(
+        body, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N)
+
+    # inter-chunk contribution: Y_off[i] = C_i · (exp(Acs_i) ⊙ h_chunk_start)
+    in_decay = jnp.exp(Acs).astype(u.dtype)  # (B,nc,Q,H)
+    Y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cr, in_decay, prev_states)
+
+    y = (Y_diag + Y_off).reshape(B, L, H, P)
+    return y, final
+
+
+def mamba_forward(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    h0: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Training / prefill pass. Returns (B,S,d) [and final (ssm, conv caches)]."""
+    s = cfg.ssm
+    di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm.headdim
+    N = s.d_state
+    z, xi, Bi, Ci, dt = _proj(p, x, cfg)
+    xs = _causal_conv(xi, p["conv_x_w"], p["conv_x_b"])
+    Bm = _causal_conv(Bi, p["conv_B_w"], p["conv_B_b"])
+    Cm = _causal_conv(Ci, p["conv_C_w"], p["conv_C_b"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    dtA = dt * A  # (B,S,H)
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    u = xh * dt[..., None].astype(x.dtype)
+    y, final = ssd_chunked(u, dtA, Bm, Cm, s.chunk, h0=h0)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        W = s.conv_width
+        # conv tails: last W-1 *pre-conv* inputs, for decode continuation
+        tail = x[:, -(W - 1) :, :]
+        _, xi_t, Bi_t, Ci_t, _ = _proj(p, tail, cfg)
+        return out, (final, {"x": xi_t, "B": Bi_t, "C": Ci_t})
+    return out
+
+
+def mamba_decode(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """O(1) recurrent step. cache: ssm (B,H,P,N), conv_{x,B,C} (B,W-1,·)."""
+    s = cfg.ssm
+    di, H, P, N = cfg.d_inner, cfg.n_ssm_heads, s.headdim, s.d_state
+    z, xi, Bi, Ci, dt = _proj(p, x, cfg)
+    win_x = jnp.concatenate([cache["conv_x"], xi.astype(cache["conv_x"].dtype)], axis=1)
+    win_B = jnp.concatenate([cache["conv_B"], Bi.astype(cache["conv_B"].dtype)], axis=1)
+    win_C = jnp.concatenate([cache["conv_C"], Ci.astype(cache["conv_C"].dtype)], axis=1)
+    xs = _conv_step(win_x.astype(x.dtype), p["conv_x_w"], p["conv_x_b"])  # (B, di)
+    Bm = _conv_step(win_B.astype(x.dtype), p["conv_B_w"], p["conv_B_b"])  # (B, N)
+    Cm = _conv_step(win_C.astype(x.dtype), p["conv_C_w"], p["conv_C_b"])
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * A).astype(x.dtype)  # (B,H)
+    xh = xs.reshape(-1, H, P)
+    u = xh * dt1[..., None].astype(x.dtype)  # (B,H,P)
+    state = cache["ssm"].astype(x.dtype) * dec[:, :, None, None] + (
+        u[..., None] * Bm[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(-1, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    new_cache = {
+        "ssm": state.astype(cache["ssm"].dtype),
+        "conv_x": win_x[:, 1:],
+        "conv_B": win_B[:, 1:],
+        "conv_C": win_C[:, 1:],
+    }
+    return out, new_cache
+
+
+def empty_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    H, P, N = cfg.n_ssm_heads, s.headdim, s.d_state
+    GN = s.n_groups * N
+    W = s.conv_width
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype=dtype),
+        "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype=dtype),
+        "conv_B": jnp.zeros((batch, W - 1, GN), dtype=dtype),
+        "conv_C": jnp.zeros((batch, W - 1, GN), dtype=dtype),
+    }

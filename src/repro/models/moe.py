@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN (DeepSeek-V3 / Kimi-K2 style).
+
+Routing: sigmoid gate scores → top-k → selected-gate renormalization, plus a
+Switch-style auxiliary load-balancing loss (DeepSeek's bias-based aux-free
+balancing is noted in DESIGN.md as a simplification).
+
+Dispatch (baseline, pure pjit): capacity-bounded **scatter dispatch** —
+tokens are scattered into an (E·C, d) buffer by slot index (expert·C +
+position-in-expert, overflow dropped), expert matmuls run dense, results
+gather back with gate weighting. This avoids the O(T·E·C) one-hot einsum
+entirely while staying GSPMD-shardable; the shard_map expert-parallel
+variant lives in `repro.distributed.moe_ep` (perf hillclimb).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as _sh
+from ..distributed.sharding import constrain
+from .common import Initializer, activation
+from .config import ModelConfig
+
+
+def init_moe(ini: Initializer, cfg: ModelConfig, path: str = "moe") -> Dict[str, Any]:
+    m = cfg.moe
+    d, ffe = cfg.d_model, m.d_ff_expert
+    E = m.n_experts
+    p = {
+        "router": ini.normal(f"{path}.router", (d, E), scale=0.006),
+        "w_gate": ini.fanin(f"{path}.w_gate", (E, d, ffe)),
+        "w_up": ini.fanin(f"{path}.w_up", (E, d, ffe)),
+        "w_down": ini.fanin(f"{path}.w_down", (E, ffe, d)),
+    }
+    if m.n_shared:
+        ffs = ffe * m.n_shared
+        p["shared_gate"] = ini.fanin(f"{path}.shared_gate", (d, ffs))
+        p["shared_up"] = ini.fanin(f"{path}.shared_up", (d, ffs))
+        p["shared_down"] = ini.fanin(f"{path}.shared_down", (ffs, d))
+    return p
+
+
+def route(
+    p: Dict[str, Any], x2d: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (top-k expert ids (T,k), gates (T,k), aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d, p["router"].astype(x2d.dtype)).astype(jnp.float32)
+    logits = constrain(logits, "moe_rows", None)
+    if m.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(scores, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch aux loss: mean prob per expert * mean assignment per expert
+    probs = scores / jnp.maximum(jnp.sum(scores, axis=-1, keepdims=True), 1e-9)
+    assign = jnp.zeros_like(probs).at[jnp.arange(x2d.shape[0])[:, None], idx].add(1.0)
+    aux = jnp.mean(jnp.mean(probs, axis=0) * jnp.mean(assign, axis=0)) * (m.n_experts**2)
+    return idx, gates.astype(x2d.dtype), aux * m.aux_loss_coef
+
+
+def moe_ffn(
+    p: Dict[str, Any], x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """(B, S, d) -> (B, S, d), aux_loss. Capacity-bounded gather dispatch.
+
+    Memory plan: only INDEX arrays (O(T·K) int32) are built token-major; the
+    wide (d-sized) buffers exist solely in expert-major layout (E, C, d),
+    sharded experts->model / capacity->data, so nothing wide is replicated.
+    With ``dispatch_chunks`` > 1 the whole dispatch/expert/combine pipeline
+    is scanned over token chunks, dividing dispatch transients by the chunk
+    count (needed to stay under 16 GiB/chip for the trillion-class configs).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    rules = _sh._rules()
+    mesh = _sh._mesh()
+    if rules and rules.get("_moe_ep") and mesh is not None:
+        from ..distributed.moe_ep import moe_ffn_ep
+
+        batch_axes = rules.get("batch") or ("data",)
+        if isinstance(batch_axes, str):
+            batch_axes = (batch_axes,)
+        return moe_ffn_ep(p, x, cfg, mesh, data_axes=batch_axes)
+    x2d = constrain(x.reshape(T, d), "moe_rows", "embed")
+    nc = m.dispatch_chunks if (m.dispatch_chunks > 1 and T % m.dispatch_chunks == 0) else 1
+    if nc > 1:
+        xs = constrain(x2d.reshape(nc, T // nc, d), None, "moe_rows", "embed")
+
+        def body(carry, xc):
+            yc, auxc = _moe_tokens(p, xc, cfg)
+            return carry, (yc, auxc)
+
+        _, (ys, auxes) = jax.lax.scan(body, None, xs)
+        return ys.reshape(B, S, d), jnp.mean(auxes)
+    y, aux = _moe_tokens(p, x2d, cfg)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_tokens(p: Dict[str, Any], x2d: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.moe
+    T, d = x2d.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(math.ceil(T * K / E * m.capacity_factor)))
+    x2d = constrain(x2d, "moe_rows", "embed")
+
+    idx, gates, aux = route(p, x2d, cfg)  # (T,K)
+
+    # position of each (token, k) within its expert queue via a stable sort
+    # (avoids any O(T·E) intermediate; standard MoE permute trick).
+    flat_e = idx.reshape(-1)  # (T*K,) token-major order
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+    pos_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    pos_in_e = jnp.zeros((T * K,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos_in_e < C
+    slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)  # drop -> OOB slot
+
+    # inverse map slot -> token id (T = sentinel row of zeros)
+    flat_tok = (jnp.arange(T * K) // K).astype(jnp.int32)
+    tok_for_slot = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(flat_tok)[:-1]
+    x2d_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    buf = x2d_pad[tok_for_slot]  # gather: (E*C, d)
+    buf = constrain(buf.reshape(E, C, d), "experts", "expert_cap", "embed")
+
+    # dense per-expert FFN (EP: experts model-sharded, capacity data-sharded)
+    act = activation(cfg.mlp_act)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x2d.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x2d.dtype))
+    h = constrain(act(g) * u, "experts", "expert_cap", None)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x2d.dtype))
+    y_buf = constrain(y_buf, "experts", "expert_cap", "embed").reshape(E * C, d)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((1, d), dtype=x2d.dtype)], axis=0)
+
+    # gather back with gate weighting
+    yk = constrain(y_buf[slot], "moe_routes", "embed")
+    yk = yk * (gates.reshape(-1, 1) * keep[:, None].astype(x2d.dtype))
+    y = jnp.sum(yk.reshape(T, K, d), axis=1)
+    y = constrain(y, "moe_rows", "embed")
+
+    if m.n_shared:
+        sg = jnp.einsum("td,df->tf", x2d, p["shared_gate"].astype(x2d.dtype))
+        su = jnp.einsum("td,df->tf", x2d, p["shared_up"].astype(x2d.dtype))
+        y = y + jnp.einsum("tf,fd->td", act(sg) * su, p["shared_down"].astype(x2d.dtype))
+    return y, aux

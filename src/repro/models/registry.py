@@ -1,0 +1,25 @@
+"""Family -> model class dispatch."""
+
+from __future__ import annotations
+
+from .config import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from .transformer import TransformerLM
+
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        from .ssm_lm import Mamba2LM
+
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from .ssm_lm import Zamba2LM
+
+        return Zamba2LM(cfg)
+    if cfg.family == "encdec":
+        from .whisper import WhisperModel
+
+        return WhisperModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,291 @@
+"""Mamba2 LM (pure SSM) and Zamba2-style hybrid (Mamba2 + shared attention).
+
+Zamba2's signature trick: ONE shared transformer block (attention + MLP),
+whose weights are reused at every invocation point (every
+``hybrid_attn_every`` SSM layers). Its input is the concatenation of the
+current hidden state with the original embedding output (so the shared
+block sees both local and global context), projected back to d_model.
+Each invocation keeps its own KV cache slot.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .attention import gqa_attention, gqa_decode, gqa_prefill, init_gqa
+from .common import Initializer, embed_lookup, make_norm, stack_init
+from .config import ModelConfig
+from .ffn import init_mlp, mlp
+from .mamba import (
+    empty_mamba_cache,
+    init_mamba,
+    mamba_decode,
+    mamba_forward,
+)
+from .transformer import TransformerLM
+
+
+def _mamba_layer_init(ini: Initializer, cfg: ModelConfig) -> Dict[str, Any]:
+    norm_init, _ = make_norm(cfg.norm)
+    return {"ln": norm_init(ini, "ln", cfg.d_model), "ssm": init_mamba(ini, cfg)}
+
+
+class Mamba2LM(TransformerLM):
+    """Pure-SSM LM. Reuses TransformerLM's embedding/loss/serving plumbing."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_dense = 0
+        self.n_moe = 0
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4)
+        ini = Initializer(keys[0], cfg.pdtype)
+        norm_init, _ = make_norm(cfg.norm)
+        params = {
+            "embed": ini.normal("embed", (cfg.vocab, cfg.d_model), scale=1.0 / cfg.d_model**0.5),
+            "layers": stack_init(cfg.n_layers, lambda i: _mamba_layer_init(i, cfg), keys[1], cfg.pdtype),
+            "ln_f": norm_init(ini, "ln_f", cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = ini.normal("lm_head", (cfg.d_model, cfg.vocab), scale=1.0 / cfg.d_model**0.5)
+        return params
+
+    def _backbone(self, params, x, positions):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+
+        def body(carry, p):
+            h = mamba_forward(p["ssm"], norm(p["ln"], carry), cfg)
+            return constrain(carry + h, "batch", "act_seq", "embed"), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return norm(params["ln_f"], x), jnp.zeros((), jnp.float32)
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x, positions = self._embed_inputs(params, batch)
+
+        def body(carry, p):
+            h, (ssm, conv) = mamba_forward(p["ssm"], norm(p["ln"], carry), cfg, return_state=True)
+            return carry + h, {"ssm": ssm, "conv_x": conv["x"], "conv_B": conv["B"], "conv_C": conv["C"]}
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+        h = norm(params["ln_f"], x)
+        logits = self._logits(params, h[:, -1:, :])
+        cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        return logits[:, 0], cache
+
+    def empty_cache(self, batch: int, seq: int, dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = dtype or cfg.cdtype
+        one = empty_mamba_cache(cfg, batch, dtype)
+        cache = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one
+        )
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x = embed_lookup(params["embed"], tokens, cfg.embed_scale, cfg.cdtype)
+
+        def body(carry, inp):
+            p, c = inp
+            h, c2 = mamba_decode(p["ssm"], norm(p["ln"], carry), c, cfg)
+            return carry + h, c2
+
+        layer_cache = {k: cache[k] for k in ("ssm", "conv_x", "conv_B", "conv_C")}
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], layer_cache))
+        h = norm(params["ln_f"], x)
+        logits = self._logits(params, h)
+        new_cache["pos"] = cache["pos"] + 1
+        return logits[:, 0], new_cache
+
+
+class Zamba2LM(TransformerLM):
+    """Mamba2 backbone + one shared attention(+MLP) block every k layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_dense = 0
+        self.n_moe = 0
+        k = cfg.hybrid_attn_every
+        # invocation points AFTER layers k-1, 2k-1, ... (0-indexed)
+        self.invocations = [i for i in range(cfg.n_layers) if (i + 1) % k == 0]
+
+    @property
+    def attn_cfg(self) -> ModelConfig:
+        """Shared block attends over concat([x, x0]) => width 2·d_model."""
+        c = self.cfg
+        return c.with_(d_model=2 * c.d_model, head_dim=2 * c.d_model // c.n_heads,
+                       sliding_window=0, global_every=0, qk_norm=False, qkv_bias=False)
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4)
+        ini = Initializer(keys[0], cfg.pdtype)
+        norm_init, _ = make_norm(cfg.norm)
+        acfg = self.attn_cfg
+        aini = Initializer(keys[2], cfg.pdtype)
+        params = {
+            "embed": ini.normal("embed", (cfg.vocab, cfg.d_model), scale=1.0 / cfg.d_model**0.5),
+            "layers": stack_init(cfg.n_layers, lambda i: _mamba_layer_init(i, cfg), keys[1], cfg.pdtype),
+            "shared": {
+                "ln_in": norm_init(aini, "shared.ln_in", 2 * cfg.d_model),
+                "attn": init_gqa(aini, acfg, "shared.attn"),
+                "out_proj": aini.fanin("shared.out_proj", (2 * cfg.d_model, cfg.d_model)),
+                "ln_mlp": norm_init(aini, "shared.ln_mlp", cfg.d_model),
+                "mlp": init_mlp(aini, cfg, "shared.mlp"),
+            },
+            "ln_f": norm_init(ini, "ln_f", cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = ini.normal("lm_head", (cfg.d_model, cfg.vocab), scale=1.0 / cfg.d_model**0.5)
+        return params
+
+    # ---- shared block -------------------------------------------------------
+    def _shared_block(self, p, x, x0, positions, cache=None, pos=None, prefill=False):
+        cfg = self.cfg
+        acfg = self.attn_cfg
+        _, norm = make_norm(cfg.norm)
+        u = jnp.concatenate([x, x0], axis=-1)
+        u = norm(p["ln_in"], u)
+        if cache is not None and not prefill:
+            a, cache = gqa_decode(p["attn"], u, cache, pos, acfg)
+        elif prefill:
+            a, cache = gqa_prefill(p["attn"], u, acfg, positions=positions)
+        else:
+            a = gqa_attention(p["attn"], u, acfg, positions=positions)
+        # a has width 2d (wo maps back to 2d); project to d and residual-add
+        y = jnp.einsum("bsk,kd->bsd", a, p["out_proj"].astype(x.dtype))
+        x = x + y
+        h = mlp(p["mlp"], norm(p["ln_mlp"], x), cfg)
+        return x + h, cache
+
+    def _mamba_segment(self, params, x, lo, hi, decode_cache=None):
+        """Run SSM layers [lo, hi) (params statically sliced for scan)."""
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+        if decode_cache is None:
+            def body(carry, p):
+                h = mamba_forward(p["ssm"], norm(p["ln"], carry), cfg)
+                return carry + h, None
+            if cfg.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, _ = jax.lax.scan(body, x, seg)
+            return x, None
+        cache_seg = jax.tree_util.tree_map(lambda a: a[lo:hi], decode_cache)
+        def body(carry, inp):
+            p, c = inp
+            h, c2 = mamba_decode(p["ssm"], norm(p["ln"], carry), c, cfg)
+            return carry + h, c2
+        x, new_seg = jax.lax.scan(body, x, (seg, cache_seg))
+        return x, new_seg
+
+    def _mamba_segment_prefill(self, params, x, lo, hi):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+        def body(carry, p):
+            h, (ssm, conv) = mamba_forward(p["ssm"], norm(p["ln"], carry), cfg, return_state=True)
+            return carry + h, {"ssm": ssm, "conv_x": conv["x"], "conv_B": conv["B"], "conv_C": conv["C"]}
+        return jax.lax.scan(body, x, seg)
+
+    def _segments(self):
+        cfg = self.cfg
+        pts = self.invocations
+        segs, lo = [], 0
+        for p in pts:
+            segs.append((lo, p + 1))
+            lo = p + 1
+        if lo < cfg.n_layers:
+            segs.append((lo, cfg.n_layers))
+        return segs, len(pts)
+
+    def _backbone(self, params, x, positions):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x0 = x
+        segs, n_inv = self._segments()
+        for i, (lo, hi) in enumerate(segs):
+            x, _ = self._mamba_segment(params, x, lo, hi)
+            if i < n_inv:
+                x, _ = self._shared_block(params["shared"], x, x0, positions)
+            x = constrain(x, "batch", "act_seq", "embed")
+        return norm(params["ln_f"], x), jnp.zeros((), jnp.float32)
+
+    # ---- serving ------------------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x, positions = self._embed_inputs(params, batch)
+        x0 = x
+        segs, n_inv = self._segments()
+        ssm_caches, attn_caches = [], []
+        for i, (lo, hi) in enumerate(segs):
+            x, c = self._mamba_segment_prefill(params, x, lo, hi)
+            ssm_caches.append(c)
+            if i < n_inv:
+                x, ac = self._shared_block(params["shared"], x, x0, positions, prefill=True)
+                attn_caches.append(ac)
+        cache = {
+            "ssm": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *ssm_caches),
+            "attn": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *attn_caches),
+            "pos": jnp.asarray(x.shape[1], jnp.int32),
+        }
+        h = norm(params["ln_f"], x)
+        logits = self._logits(params, h[:, -1:, :])
+        return logits[:, 0], cache
+
+    def empty_cache(self, batch: int, seq: int, dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = dtype or cfg.cdtype
+        acfg = self.attn_cfg
+        one = empty_mamba_cache(cfg, batch, dtype)
+        _, n_inv = self._segments()
+        return {
+            "ssm": jax.tree_util.tree_map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one
+            ),
+            "attn": {
+                "k": jnp.zeros((n_inv, batch, acfg.n_kv_heads, seq, acfg.head_dim), dtype),
+                "v": jnp.zeros((n_inv, batch, acfg.n_kv_heads, seq, acfg.head_dim), dtype),
+            },
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        pos = cache["pos"]
+        x = embed_lookup(params["embed"], tokens, cfg.embed_scale, cfg.cdtype)
+        x0 = x
+        segs, n_inv = self._segments()
+        new_ssm, new_attn = [], []
+        for i, (lo, hi) in enumerate(segs):
+            x, c = self._mamba_segment(params, x, lo, hi, decode_cache=cache["ssm"])
+            new_ssm.append(c)
+            if i < n_inv:
+                ac = jax.tree_util.tree_map(lambda a: a[i], cache["attn"])
+                x, ac2 = self._shared_block(params["shared"], x, x0, None, cache=ac, pos=pos)
+                new_attn.append(ac2)
+        new_cache = {
+            "ssm": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm),
+            "attn": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *new_attn),
+            "pos": pos + 1,
+        }
+        h = norm(params["ln_f"], x)
+        logits = self._logits(params, h)
+        return logits[:, 0], new_cache

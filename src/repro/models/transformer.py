@@ -1,0 +1,409 @@
+"""Unified decoder-only transformer LM covering the dense / MoE / VLM
+assigned architectures (gemma3, olmo, internlm2, qwen2.5, llava-mistral,
+deepseek-v3, kimi-k2).
+
+Layer stacks are `lax.scan`'d over stacked parameters (small HLO, fast
+compile, remat-friendly). Heterogeneous per-layer behaviour (gemma3's 5:1
+local:global pattern) rides through the scan as traced per-layer flags with
+purely arithmetic masking. MoE models scan dense-prefix layers and MoE
+layers separately (different param trees).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .attention import (
+    gqa_attention,
+    gqa_decode,
+    gqa_prefill,
+    init_gqa,
+    init_mla,
+    mla_attention,
+    mla_decode,
+)
+from .common import (
+    Initializer,
+    cross_entropy_loss,
+    embed_lookup,
+    make_norm,
+    stack_init,
+)
+from .config import ModelConfig
+from .ffn import init_mlp, mlp
+from .moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------- layer defs
+def _init_layer(ini: Initializer, cfg: ModelConfig, *, use_moe: bool) -> Dict[str, Any]:
+    norm_init, _ = make_norm(cfg.norm)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "ln_attn": norm_init(ini, "ln_attn", d),
+        "ln_mlp": norm_init(ini, "ln_mlp", d),
+    }
+    if cfg.sandwich_norm:
+        p["ln_attn_post"] = norm_init(ini, "ln_attn_post", d)
+        p["ln_mlp_post"] = norm_init(ini, "ln_mlp_post", d)
+    p["attn"] = init_mla(ini, cfg) if cfg.attn_type == "mla" else init_gqa(ini, cfg)
+    p["ffn"] = init_moe(ini, cfg) if use_moe else init_mlp(ini, cfg)
+    return p
+
+
+def _layer_fwd(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    is_global,
+    rope_theta,
+    use_moe: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln_attn"], x)
+    if cfg.attn_type == "mla":
+        a = mla_attention(p["attn"], h, cfg, positions=positions, chunk=cfg.attn_chunk)
+    else:
+        a = gqa_attention(
+            p["attn"], h, cfg, positions=positions, is_global=is_global,
+            rope_theta=rope_theta, chunk=cfg.attn_chunk,
+        )
+    if cfg.sandwich_norm:
+        a = norm(p["ln_attn_post"], a)
+    x = constrain(x + a, "batch", "act_seq", "embed")
+    h = norm(p["ln_mlp"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        f, aux = moe_ffn(p["ffn"], h, cfg)
+    else:
+        f = mlp(p["ffn"], h, cfg)
+    if cfg.sandwich_norm:
+        f = norm(p["ln_mlp_post"], f)
+    x = constrain(x + f, "batch", "act_seq", "embed")
+    return x, aux
+
+
+def _layer_prefill(p, x, cfg, *, positions, is_global, rope_theta, use_moe):
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln_attn"], x)
+    if cfg.attn_type == "mla":
+        a, kv = mla_attention(p["attn"], h, cfg, positions=positions, with_cache=True, chunk=cfg.attn_chunk)
+    else:
+        a, kv = gqa_prefill(
+            p["attn"], h, cfg, positions=positions, is_global=is_global,
+            rope_theta=rope_theta, chunk=cfg.attn_chunk,
+        )
+    if cfg.sandwich_norm:
+        a = norm(p["ln_attn_post"], a)
+    x = x + a
+    h = norm(p["ln_mlp"], x)
+    f = moe_ffn(p["ffn"], h, cfg)[0] if use_moe else mlp(p["ffn"], h, cfg)
+    if cfg.sandwich_norm:
+        f = norm(p["ln_mlp_post"], f)
+    return x + f, kv
+
+
+def _layer_decode(p, x, cache, pos, cfg, *, is_global, rope_theta, use_moe):
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln_attn"], x)
+    if cfg.attn_type == "mla":
+        a, cache = mla_decode(p["attn"], h, cache, pos, cfg)
+    else:
+        a, cache = gqa_decode(
+            p["attn"], h, cache, pos, cfg, is_global=is_global, rope_theta=rope_theta
+        )
+    if cfg.sandwich_norm:
+        a = norm(p["ln_attn_post"], a)
+    x = x + a
+    h = norm(p["ln_mlp"], x)
+    f = moe_ffn(p["ffn"], h, cfg)[0] if use_moe else mlp(p["ffn"], h, cfg)
+    if cfg.sandwich_norm:
+        f = norm(p["ln_mlp_post"], f)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------- model
+class TransformerLM:
+    """Functional model: params are plain pytrees; methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        m = cfg.moe
+        self.n_dense = cfg.n_layers if not (m and m.n_experts) else m.first_dense
+        self.n_moe = cfg.n_layers - self.n_dense
+
+    # ---- init -----------------------------------------------------------
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        ini = Initializer(keys[0], cfg.pdtype)
+        params: Dict[str, Any] = {
+            "embed": ini.normal("embed", (cfg.vocab, cfg.d_model), scale=1.0 / cfg.d_model**0.5),
+        }
+        norm_init, _ = make_norm(cfg.norm)
+        params["ln_f"] = norm_init(ini, "ln_f", cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = ini.normal(
+                "lm_head", (cfg.d_model, cfg.vocab), scale=1.0 / cfg.d_model**0.5
+            )
+        if self.n_dense:
+            params["dense_layers"] = stack_init(
+                self.n_dense,
+                lambda i: _init_layer(i, cfg, use_moe=False),
+                keys[1],
+                cfg.pdtype,
+            )
+        if self.n_moe:
+            params["moe_layers"] = stack_init(
+                self.n_moe,
+                lambda i: _init_layer(i, cfg, use_moe=True),
+                keys[2],
+                cfg.pdtype,
+            )
+        if cfg.n_patches:
+            # VLM adapter: projects (stub) vision-encoder patch embeddings
+            params["mm_proj"] = ini.fanin("mm_proj", (cfg.d_model, cfg.d_model))
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": ini.fanin("mtp.proj", (2 * cfg.d_model, cfg.d_model)),
+                "layer": _init_layer(Initializer(keys[3], cfg.pdtype), cfg, use_moe=False),
+                "ln": norm_init(ini, "mtp.ln", cfg.d_model),
+            }
+        return params
+
+    # ---- helpers ----------------------------------------------------------
+    def _layer_flags(self, n: int, offset: int = 0):
+        """(is_global, rope_theta) per layer, as scan xs."""
+        cfg = self.cfg
+        idx = jnp.arange(offset, offset + n)
+        if cfg.global_every:
+            is_global = ((idx + 1) % cfg.global_every == 0).astype(jnp.float32)
+        elif cfg.sliding_window:
+            is_global = jnp.zeros((n,), jnp.float32)  # all layers local (mistral)
+        else:
+            is_global = jnp.ones((n,), jnp.float32)
+        theta_g = cfg.rope_theta_global or cfg.rope_theta
+        rope_theta = jnp.where(is_global > 0, theta_g, cfg.rope_theta)
+        return is_global, rope_theta
+
+    def _scan_stack(self, layers, x, positions, *, use_moe: bool, offset: int):
+        cfg = self.cfg
+        n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+        flags = self._layer_flags(n, offset)
+
+        def body(carry, inp):
+            p, (g, th) = inp
+            y, aux = _layer_fwd(
+                p, carry, cfg, positions=positions, is_global=g,
+                rope_theta=th, use_moe=use_moe,
+            )
+            return y, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, auxes = jax.lax.scan(body, x, (layers, flags))
+        return x, jnp.sum(auxes)
+
+    def _embed_inputs(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Returns (x (B,S,d), positions (S,)). VLM prepends patch embeds."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens, cfg.embed_scale, cfg.cdtype)
+        if cfg.n_patches and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(cfg.cdtype)
+            pe = jnp.einsum("bpd,de->bpe", pe, params["mm_proj"].astype(cfg.cdtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+        return constrain(x, "batch", "seq", "embed"), jnp.arange(S)
+
+    def _backbone(self, params, x, positions):
+        aux = jnp.zeros((), jnp.float32)
+        if self.n_dense:
+            x, a = self._scan_stack(params["dense_layers"], x, positions, use_moe=False, offset=0)
+            aux += a
+        if self.n_moe:
+            x, a = self._scan_stack(
+                params["moe_layers"], x, positions, use_moe=True, offset=self.n_dense
+            )
+            aux += a
+        _, norm = make_norm(self.cfg.norm)
+        return norm(params["ln_f"], x), aux
+
+    def _logits(self, params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        return constrain(logits, "batch", "seq", "vocab")
+
+    def _chunked_ce(self, params, h, labels, mask, chunk: int = 256):
+        """Scan CE over seq chunks so full (B,S,V) logits never materialize."""
+        cfg = self.cfg
+        B, S, d = h.shape
+        chunk = min(chunk, S)
+        n = S // chunk
+        rem = S - n * chunk
+
+        def piece(hc, lc, mc):
+            logits = self._logits(params, hc)
+            loss, acc = cross_entropy_loss(logits, lc, mc)
+            cnt = jnp.maximum(jnp.sum(mc.astype(jnp.float32)), 1e-9)
+            return loss * cnt, acc * cnt, cnt
+
+        piece = jax.checkpoint(piece, prevent_cse=False)
+
+        def body(carry, i):
+            hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+            lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+            mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+            l, a, c = piece(hc, lc, mc)
+            return (carry[0] + l, carry[1] + a, carry[2] + c), None
+
+        (tl, ta, tc), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), jnp.arange(n)
+        )
+        if rem:
+            l, a, c = piece(h[:, n * chunk :], labels[:, n * chunk :], mask[:, n * chunk :])
+            tl, ta, tc = tl + l, ta + a, tc + c
+        return tl / jnp.maximum(tc, 1e-9), ta / jnp.maximum(tc, 1e-9)
+
+    # ---- train ------------------------------------------------------------
+    def train_loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """batch: tokens (B,S) [+ patch_embeds (B,P,d)]. Next-token LM loss
+        over text positions."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        h, aux = self._backbone(params, x, positions)
+        tokens = batch["tokens"]
+        P = h.shape[1] - tokens.shape[1]  # vision prefix length (0 if pure LM)
+        h_text = h[:, P:, :]
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        loss, acc = self._chunked_ce(params, h_text, labels, mask)
+        metrics = {"ce": loss, "aux": aux, "acc": acc}
+        total = loss + aux
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(params, h_text, tokens)
+            metrics["mtp"] = mtp_loss
+            total = total + cfg.mtp_weight * mtp_loss
+        metrics["loss"] = total
+        return total, metrics
+
+    def _mtp_loss(self, params, h, tokens):
+        """DeepSeek-V3 MTP depth-1: predict token t+2 from h_t ++ emb(t+1)."""
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        p = params["mtp"]
+        # keep full length S (chunk-friendly): emb of token t+1, garbage at the
+        # last position, masked out of the loss below.
+        next_tok = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        emb_next = embed_lookup(params["embed"], next_tok, cfg.embed_scale, cfg.cdtype)
+        h_in = jnp.concatenate([norm(p["ln"], h), emb_next], axis=-1)
+        h_in = jnp.einsum("bsk,kd->bsd", h_in, p["proj"].astype(h.dtype))
+        S = h_in.shape[1]
+        h_out, _ = _layer_fwd(
+            p["layer"], h_in, cfg, positions=jnp.arange(S),
+            is_global=jnp.float32(1), rope_theta=cfg.rope_theta, use_moe=False,
+        )
+        # predict token t+2 from position t; mask the last two positions
+        labels = jnp.concatenate([tokens[:, 2:], tokens[:, -2:]], axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -2:].set(0.0)
+        loss, _ = self._chunked_ce(params, h_out, labels, mask)
+        return loss
+
+    # ---- serve ------------------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Process a prompt; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        cache: Dict[str, Any] = {}
+
+        def run(layers, x, *, use_moe, offset):
+            n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+            flags = self._layer_flags(n, offset)
+
+            def body(carry, inp):
+                p, (g, th) = inp
+                y, kv = _layer_prefill(
+                    p, carry, cfg, positions=positions, is_global=g,
+                    rope_theta=th, use_moe=use_moe,
+                )
+                return y, kv
+
+            return jax.lax.scan(body, x, (layers, flags))
+
+        if self.n_dense:
+            x, kv = run(params["dense_layers"], x, use_moe=False, offset=0)
+            cache["dense"] = kv
+        if self.n_moe:
+            x, kv = run(params["moe_layers"], x, use_moe=True, offset=self.n_dense)
+            cache["moe"] = kv
+        _, norm = make_norm(cfg.norm)
+        h = norm(params["ln_f"], x)
+        logits = self._logits(params, h[:, -1:, :])
+        cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        return logits[:, 0], cache
+
+    def empty_cache(self, batch: int, seq: int, dtype=None) -> Dict[str, Any]:
+        """Allocate a zeroed KV cache of capacity ``seq`` (for decode shapes)."""
+        cfg = self.cfg
+        dtype = dtype or cfg.cdtype
+        def kv(n):
+            if cfg.attn_type == "mla":
+                m = cfg.mla
+                return {
+                    "latent": jnp.zeros((n, batch, seq, m.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((n, batch, seq, m.qk_rope_head_dim), dtype),
+                }
+            return {
+                "k": jnp.zeros((n, batch, cfg.n_kv_heads, seq, cfg.head_dim), dtype),
+                "v": jnp.zeros((n, batch, cfg.n_kv_heads, seq, cfg.head_dim), dtype),
+            }
+        cache: Dict[str, Any] = {}
+        if self.n_dense:
+            cache["dense"] = kv(self.n_dense)
+        if self.n_moe:
+            cache["moe"] = kv(self.n_moe)
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One token for every sequence in the batch. tokens: (B, 1)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = embed_lookup(params["embed"], tokens, cfg.embed_scale, cfg.cdtype)
+        x = constrain(x, "batch", None, "embed")
+
+        def run(layers, layer_cache, x, *, use_moe, offset):
+            n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+            flags = self._layer_flags(n, offset)
+
+            def body(carry, inp):
+                p, c, (g, th) = inp
+                y, c2 = _layer_decode(
+                    p, carry, c, pos, cfg, is_global=g, rope_theta=th, use_moe=use_moe
+                )
+                return y, c2
+
+            return jax.lax.scan(body, x, (layers, layer_cache, flags))
+
+        new_cache: Dict[str, Any] = {}
+        if self.n_dense:
+            x, c = run(params["dense_layers"], cache["dense"], x, use_moe=False, offset=0)
+            new_cache["dense"] = c
+        if self.n_moe:
+            x, c = run(params["moe_layers"], cache["moe"], x, use_moe=True, offset=self.n_dense)
+            new_cache["moe"] = c
+        _, norm = make_norm(cfg.norm)
+        h = norm(params["ln_f"], x)
+        logits = self._logits(params, h)
+        new_cache["pos"] = pos + 1
+        return logits[:, 0], new_cache

@@ -1,0 +1,5 @@
+"""Batched decode serving on RawArray-mmapped weights."""
+
+from .engine import ServeEngine
+
+__all__ = ["ServeEngine"]

@@ -1,0 +1,5 @@
+"""Fault-tolerant training loop."""
+
+from .loop import TrainLoopConfig, train
+
+__all__ = ["train", "TrainLoopConfig"]

@@ -1,0 +1,156 @@
+"""Partition specs, sharding rules, MoE invariants, HLO analysis."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import all_arch_ids, get_config
+from repro.distributed import optimizer as optim
+from repro.distributed.partition import opt_state_specs, param_specs
+from repro.launch.hlo_analysis import collective_stats, computation_multipliers, split_computations
+from repro.models import build_model
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return dict(mesh.shape)[axes]
+    n = 1
+    for a in axes:
+        n *= dict(mesh.shape)[a]
+    return n
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["pod", "multipod"])
+def test_param_specs_divide_evenly(arch, mesh):
+    """Every spec produced must evenly divide its dim — the invariant that
+    makes the dry-run lower."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_specs(shapes, cfg, mesh)
+
+    def check(path, leaf, spec):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            assert dim % _axis_size(mesh, axes) == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, specs,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+
+
+def test_big_params_actually_sharded():
+    """The big matrices must not silently fall back to replicated."""
+    cfg = get_config("qwen2.5-14b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_specs(shapes, cfg, MESH)
+    flat = {"/".join(str(getattr(k, "key", k)) for k in p): s
+            for p, s in jax.tree_util.tree_flatten_with_path(specs)[0]}
+    assert flat["embed"] != P(None, None)
+    assert any(a is not None for a in tuple(flat["dense_layers/attn/wq"]))
+    assert any(a is not None for a in tuple(flat["dense_layers/ffn/w_up"]))
+
+
+def test_opt_state_specs_match_param_tree():
+    cfg = get_config("deepseek-v3-671b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(shapes, cfg, MESH)
+    acfg = optim.AdamWConfig(moment_dtype="int8")
+    oshapes = jax.eval_shape(lambda: optim.init_state(shapes, acfg))
+    ospecs = opt_state_specs(oshapes, pspecs)
+    # every quantized moment leaf got a spec tree with q + scale
+    def count(t):
+        return len(jax.tree_util.tree_leaves(t, is_leaf=lambda x: isinstance(x, P)))
+    assert count(ospecs["m"]) == 2 * len(jax.tree_util.tree_leaves(shapes))
+
+
+# ------------------------------------------------------------- MoE behaviour
+def test_moe_gates_normalized_and_capacity_respected():
+    import dataclasses
+
+    from repro.models.moe import moe_ffn, route
+
+    cfg = get_config("deepseek-v3-671b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    layer_p = jax.tree_util.tree_map(lambda a: a[0], params["moe_layers"])["ffn"]
+    rng = np.random.default_rng(0)
+    x2d = jnp.asarray(rng.normal(size=(64, cfg.d_model)), jnp.float32)
+    idx, gates, aux = route(layer_p, x2d, cfg)
+    assert idx.shape == (64, cfg.moe.top_k)
+    np.testing.assert_allclose(np.asarray(gates).sum(-1), 1.0, rtol=1e-5)
+    assert float(aux) >= 0
+    # monkeypatch capacity to 1: output must still be finite (drops happen)
+    tight = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=0.01))
+    y, aux2 = moe_ffn(layer_p, x2d[None], tight)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_moe_chunked_dispatch_equivalent():
+    import dataclasses
+
+    cfg = get_config("deepseek-v3-671b").reduced()
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (2, 32)), jnp.int32)
+    l1, _ = jax.jit(model.train_loss)(params, {"tokens": tokens})
+    cfg2 = cfg.with_(moe=dataclasses.replace(cfg.moe, dispatch_chunks=4))
+    model2 = build_model(cfg2)
+    l2, _ = jax.jit(model2.train_loss)(params, {"tokens": tokens})
+    # chunked capacity differs per chunk; with high capacity_factor no drops
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+
+
+# ------------------------------------------------------------- HLO analysis
+_FAKE_HLO = """\
+HloModule test
+
+%inner_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+}
+
+%inner_cond (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(4)
+}
+
+%outer_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %w2 = (s32[], f32[8]) while(%t), condition=%inner_cond, body=%inner_body
+  %ag = f32[16]{0} all-gather(%y), dimensions={0}
+}
+
+%outer_cond (p: (s32[], f32[8])) -> pred[] {
+  %c2 = s32[] constant(3)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%t0), condition=%outer_cond, body=%outer_body
+  %ar2 = f32[32]{0} all-reduce(%a), to_apply=%sum
+}
+"""
+
+
+def test_hlo_trip_count_scaling():
+    comps = split_computations(_FAKE_HLO)
+    assert set(comps) >= {"__entry__", "outer_body", "inner_body", "outer_cond", "inner_cond"}
+    mult = computation_multipliers(comps)
+    assert mult["outer_body"] == 3
+    assert mult["inner_body"] == 12  # 3 x 4
+    st = collective_stats(_FAKE_HLO)
+    # all-reduce: 12 x 32B (inner) + 1 x 128B (entry) = 512B
+    assert st["per_kind"]["all-reduce"]["bytes"] == 12 * 32 + 128
+    # all-gather: 3 x 64B
+    assert st["per_kind"]["all-gather"]["bytes"] == 3 * 64

@@ -1,0 +1,194 @@
+"""Core RawArray format: unit + property tests (hypothesis)."""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as ra
+from repro.core.spec import FIXED_HEADER_BYTES, MAGIC_BYTES
+
+
+# ---------------------------------------------------------------- unit
+def test_magic_is_ascii_rawarray(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(p, np.zeros(3, np.float32))
+    with open(p, "rb") as f:
+        assert f.read(8) == MAGIC_BYTES  # od -c shows 'rawarray'
+
+
+def test_header_layout_matches_paper_table1(tmp_path):
+    p = tmp_path / "x.ra"
+    arr = np.zeros((6, 2), np.complex64)
+    ra.write(p, arr)
+    raw = open(p, "rb").read()
+    u64 = np.frombuffer(raw[:48], "<u8")
+    assert u64[1] == 0            # flags
+    assert u64[2] == 4            # eltype: complex
+    assert u64[3] == 8            # elbyte: complex64
+    assert u64[4] == 6 * 2 * 8    # data_length
+    assert u64[5] == 2            # ndims
+    dims = np.frombuffer(raw[48:64], "<u8")
+    assert list(dims) == [6, 2]
+    assert len(raw) == 64 + 96    # header + data, nothing else
+
+
+def test_file_size_prediction(tmp_path):
+    arr = np.zeros((3, 5, 7), np.int16)
+    p = tmp_path / "x.ra"
+    ra.write(p, arr)
+    assert os.path.getsize(p) == ra.nbytes_on_disk(arr)
+
+
+def test_identical_contents_identical_files(tmp_path):
+    """Paper: two RawArray files are identical iff contents identical (no
+    timestamps inside)."""
+    arr = np.arange(10, dtype=np.float64)
+    p1, p2 = tmp_path / "a.ra", tmp_path / "b.ra"
+    ra.write(p1, arr)
+    import time
+
+    time.sleep(0.01)
+    ra.write(p2, arr)
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+def test_truncation_detected(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(p, np.arange(100, dtype=np.float32))
+    blob = open(p, "rb").read()
+    open(p, "wb").write(blob[:-10])
+    with pytest.raises(ra.RawArrayError, match="truncated"):
+        ra.read(p)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "x.ra"
+    open(p, "wb").write(b"notrawarray" + b"\x00" * 64)
+    with pytest.raises(ra.RawArrayError, match="magic"):
+        ra.read(p)
+
+
+def test_unknown_flags_rejected_strict(tmp_path):
+    p = tmp_path / "x.ra"
+    arr = np.zeros(2, np.float32)
+    ra.write(p, arr)
+    blob = bytearray(open(p, "rb").read())
+    blob[8] |= 0x80  # set an unknown flag bit
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ra.RawArrayError, match="flag"):
+        ra.read(p)
+    # lenient mode reads anyway (forward compat for readers that opt in)
+    out = ra.read(p, strict_flags=False)
+    assert np.array_equal(out, arr)
+
+
+def test_crc_detects_corruption(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(p, np.arange(64, dtype=np.float32), crc32=True)
+    blob = bytearray(open(p, "rb").read())
+    blob[100] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ra.RawArrayError, match="CRC32"):
+        ra.read(p)
+
+
+def test_metadata_append_and_read(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(p, np.zeros(4, np.uint8))
+    ra.append_metadata(p, b'{"k": 1}')
+    ra.append_metadata(p, b"more")
+    assert ra.read_metadata(p) == b'{"k": 1}more'
+    assert np.array_equal(ra.read(p), np.zeros(4, np.uint8))
+
+
+def test_memmap_is_zero_copy_view(tmp_path):
+    p = tmp_path / "x.ra"
+    arr = np.arange(1000, dtype=np.float32).reshape(10, 100)
+    ra.write(p, arr)
+    m = ra.memmap(p)
+    assert isinstance(m, np.memmap)
+    assert np.array_equal(np.asarray(m[3:5]), arr[3:5])
+    s = ra.memmap_slice(p, 4, 8)
+    assert np.array_equal(np.asarray(s), arr[4:8])
+
+
+def test_memmap_refuses_compressed(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(p, np.zeros(100, np.float32), compress=True)
+    with pytest.raises(ra.RawArrayError, match="compress"):
+        ra.memmap(p)
+
+
+# ---------------------------------------------------------------- property
+_DTYPES = ["int8", "uint8", "int16", "uint16", "int32", "uint32", "int64",
+           "float16", "float32", "float64", "complex64", "complex128"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dtype=st.sampled_from(_DTYPES),
+    shape=st.lists(st.integers(0, 7), min_size=0, max_size=4),
+    big_endian=st.booleans(),
+    compress=st.booleans(),
+    crc=st.booleans(),
+    meta=st.binary(max_size=64),
+)
+def test_roundtrip_property(tmp_path_factory, dtype, shape, big_endian, compress, crc, meta):
+    d = tmp_path_factory.mktemp("prop")
+    rng = np.random.default_rng(0)
+    n = int(np.prod(shape)) if shape else 1
+    arr = (rng.integers(0, 100, size=n) - 50).astype(dtype).reshape(shape)
+    p = os.path.join(d, "x.ra")
+    ra.write(p, arr, big_endian=big_endian, compress=compress, crc32=crc,
+             metadata=meta if not crc else None)
+    back = ra.read(p)
+    assert back.shape == arr.shape
+    assert np.array_equal(np.asarray(back, np.complex128), np.asarray(arr, np.complex128))
+    hdr = ra.header_of(p)
+    assert hdr.ndims == len(shape)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 50),
+    cols=st.integers(1, 8),
+    nshards=st.integers(1, 8),
+    lo_frac=st.floats(0, 1),
+    hi_frac=st.floats(0, 1),
+)
+def test_sharded_slice_property(tmp_path_factory, rows, cols, nshards, lo_frac, hi_frac):
+    d = str(tmp_path_factory.mktemp("shard"))
+    arr = np.arange(rows * cols, dtype=np.int32).reshape(rows, cols)
+    ra.write_sharded(d, arr, nshards=nshards)
+    lo = int(lo_frac * rows)
+    hi = lo + int(hi_frac * (rows - lo))
+    assert np.array_equal(ra.read_slice(d, lo, hi), arr[lo:hi])
+    assert np.array_equal(ra.read_sharded(d), arr)
+
+
+def test_bfloat16_roundtrip(tmp_path):
+    import ml_dtypes
+
+    arr = np.linspace(-3, 3, 24, dtype=np.float32).astype(ml_dtypes.bfloat16).reshape(4, 6)
+    p = tmp_path / "b.ra"
+    ra.write(p, arr)
+    hdr = ra.header_of(p)
+    assert (hdr.eltype, hdr.elbyte) == (ra.ELTYPE_BRAIN, 2)
+    back = ra.read(p)
+    assert np.array_equal(back.astype(np.float32), arr.astype(np.float32))
+
+
+def test_struct_records_roundtrip(tmp_path):
+    """Paper: user-defined struct types (eltype 0) — caller reinterprets."""
+    sd = np.dtype([("a", "<f4"), ("b", "<i4"), ("c", "<u2")])
+    s = np.zeros(7, dtype=sd)
+    s["a"] = np.linspace(0, 1, 7)
+    s["b"] = np.arange(7)
+    p = tmp_path / "s.ra"
+    ra.write(p, s)
+    hdr = ra.header_of(p)
+    assert (hdr.eltype, hdr.elbyte) == (ra.ELTYPE_STRUCT, sd.itemsize)
+    back = ra.read(p).view(sd).reshape(s.shape)
+    assert np.array_equal(back, s)

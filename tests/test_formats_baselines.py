@@ -1,0 +1,116 @@
+"""Baseline format implementations (png / hdf5min / nrrd)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.formats import hdf5min, nrrd, png
+
+
+# ------------------------------------------------------------------- png
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 40),
+    w=st.integers(1, 40),
+    rgb=st.booleans(),
+    level=st.sampled_from([0, 1, 6]),
+)
+def test_png_roundtrip_property(h, w, rgb, level):
+    rng = np.random.default_rng(h * 41 + w)
+    img = rng.integers(0, 256, (h, w, 3) if rgb else (h, w), dtype=np.uint8)
+    assert np.array_equal(png.decode(png.encode(img, level=level)), img)
+
+
+@pytest.mark.parametrize("filt", [1, 2, 3, 4])
+def test_png_decode_all_filters(filt):
+    """Our encoder emits filter 0; the decoder must handle 1-4 (real files)."""
+    import struct
+    import zlib
+
+    rng = np.random.default_rng(filt)
+    img = rng.integers(0, 256, (9, 13), dtype=np.uint8)
+    h, w = img.shape
+    raw = bytearray()
+    prev = np.zeros(w, np.int16)
+    for y in range(h):
+        raw.append(filt)
+        row = img[y].astype(np.int16)
+        if filt == 1:
+            enc = row.copy()
+            enc[1:] -= row[:-1]
+        elif filt == 2:
+            enc = row - prev
+        elif filt == 3:
+            left = np.concatenate([[0], row[:-1]])
+            enc = row - ((left + prev) // 2)
+        else:  # paeth
+            enc = np.empty_like(row)
+            for x in range(w):
+                a = int(row[x - 1]) if x else 0
+                b = int(prev[x])
+                c = int(prev[x - 1]) if x else 0
+                pp = a + b - c
+                pa, pb, pc = abs(pp - a), abs(pp - b), abs(pp - c)
+                pred = a if (pa <= pb and pa <= pc) else (b if pb <= pc else c)
+                enc[x] = row[x] - pred
+        raw += (enc % 256).astype(np.uint8).tobytes()
+        prev = row
+
+    def chunk(tag, payload):
+        return (
+            struct.pack(">I", len(payload)) + tag + payload
+            + struct.pack(">I", zlib.crc32(tag + payload) & 0xFFFFFFFF)
+        )
+
+    data = (
+        b"\x89PNG\r\n\x1a\n"
+        + chunk(b"IHDR", struct.pack(">IIBBBBB", w, h, 8, 0, 0, 0, 0))
+        + chunk(b"IDAT", zlib.compress(bytes(raw)))
+        + chunk(b"IEND", b"")
+    )
+    assert np.array_equal(png.decode(data), img)
+
+
+# ------------------------------------------------------------------- hdf5
+@pytest.mark.parametrize("dtype", ["int8", "uint16", "int32", "int64", "float32", "float64"])
+def test_hdf5_dtype_roundtrip(tmp_path, dtype):
+    arr = (np.arange(24) - 12).astype(dtype).reshape(2, 3, 4)
+    p = str(tmp_path / "x.h5")
+    hdf5min.write(p, arr)
+    assert np.array_equal(hdf5min.read(p), arr)
+
+
+def test_hdf5_signature_and_many_datasets(tmp_path):
+    p = str(tmp_path / "m.h5")
+    arrs = {f"ds{i:03d}": np.full((5,), i, np.float32) for i in range(50)}
+    hdf5min.write_datasets(p, arrs)
+    assert open(p, "rb").read(8) == b"\x89HDF\r\n\x1a\n"
+    f = hdf5min.H5MinFile(p)
+    assert set(f.names) == set(arrs)
+    for n, a in arrs.items():
+        assert np.array_equal(f.read(n), a)
+
+
+def test_hdf5_incremental_equivalent(tmp_path):
+    arrs = {f"d{i}": np.random.default_rng(i).normal(size=(7,)).astype(np.float32) for i in range(9)}
+    p1, p2 = str(tmp_path / "a.h5"), str(tmp_path / "b.h5")
+    hdf5min.write_datasets(p1, arrs)
+    hdf5min.write_datasets_incremental(p2, arrs)
+    f1, f2 = hdf5min.H5MinFile(p1), hdf5min.H5MinFile(p2)
+    for n in arrs:
+        assert np.array_equal(f1.read(n), f2.read(n))
+
+
+# ------------------------------------------------------------------- nrrd
+@settings(max_examples=15, deadline=None)
+@given(
+    dtype=st.sampled_from(["uint8", "int16", "int32", "float32", "float64"]),
+    shape=st.lists(st.integers(1, 6), min_size=1, max_size=4),
+)
+def test_nrrd_roundtrip_property(tmp_path_factory, dtype, shape):
+    d = tmp_path_factory.mktemp("nrrd")
+    arr = np.arange(int(np.prod(shape)), dtype=dtype).reshape(shape)
+    p = str(d / "x.nrrd")
+    nrrd.write(p, arr)
+    back = nrrd.read(p)
+    assert back.shape == arr.shape and np.array_equal(back, arr)
