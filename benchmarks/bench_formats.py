@@ -18,13 +18,18 @@ from __future__ import annotations
 import os
 import pickle
 import shutil
+import sys
 import tempfile
 import time
 from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
+# allow `python benchmarks/bench_formats.py` from a fresh clone (no install)
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
 import repro.core as ra
+from repro.core import engine
 from repro.formats import hdf5min, npy, nrrd
 
 # reduced by default so `python -m benchmarks.run` stays fast; --full uses
@@ -141,6 +146,170 @@ def bench_formats(full: bool = False) -> List[Dict]:
     return rows
 
 
+def _best_of(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_engine(full: bool = False) -> List[Dict]:
+    """Parallel I/O engine vs the sequential paths (emits the BENCH_IO rows).
+
+    Three cases, each against its pre-engine baseline:
+      * ``read_256mb``    — one >=256 MiB file into a preallocated buffer:
+        single-stream positioned read vs slab-parallel preads, sweeping
+        worker count and chunk size (plus the fresh-allocation ``ra.read``).
+      * ``read_slice``    — multi-shard ranged read: seed mmap+concat
+        (``read_slice_naive``) vs one parallel wave into one buffer.
+      * ``loader_gather`` — DataLoader shuffled batches/s: seed per-row
+        fancy-indexing with per-batch allocation vs coalescing planner with
+        a reused batch-buffer ring.
+    """
+    from repro.data import DataLoader, RaDataset, RaDatasetWriter
+
+    rows: List[Dict] = []
+    size = 256 << 20  # acceptance floor: a >=256 MiB single-file read
+    nshards = 8
+    d = tempfile.mkdtemp(prefix="bench_engine_")
+
+    def _clear_env():
+        for k in ("RA_IO_SEQUENTIAL", "RA_IO_WORKERS", "RA_IO_CHUNK"):
+            os.environ.pop(k, None)
+
+    try:
+        # ---- case 1: single-file parallel read ---------------------------
+        big = np.frombuffer(os.urandom(1 << 20), np.uint8)
+        big = np.tile(big, size >> 20)
+        p = os.path.join(d, "big.ra")
+        ra.write(p, big)
+        out = np.empty_like(big)
+        ra.read_into(p, out)  # warm page cache + fault the destination
+        mb = big.nbytes / 2**20
+
+        _clear_env()
+        os.environ["RA_IO_SEQUENTIAL"] = "1"
+        seq_s = _best_of(lambda: ra.read_into(p, out))
+        _clear_env()
+        rows.append({"bench": "engine", "case": "read_256mb", "mode": "sequential",
+                     "seconds": seq_s, "mb_s": mb / seq_s, "speedup": 1.0})
+        best_par = float("inf")
+        for w in ((2, 4) if not full else (2, 4, 8)):
+            for chunk_mb in ((8, 16) if not full else (2, 8, 16, 32)):
+                os.environ["RA_IO_WORKERS"] = str(w)
+                os.environ["RA_IO_CHUNK"] = str(chunk_mb << 20)
+                t = _best_of(lambda: ra.read_into(p, out))
+                _clear_env()
+                best_par = min(best_par, t)
+                rows.append({"bench": "engine", "case": "read_256mb",
+                             "mode": f"parallel_w{w}_c{chunk_mb}m",
+                             "seconds": t, "mb_s": mb / t, "speedup": seq_s / t})
+        # fresh-allocation ra.read for context (allocation faults dominate it)
+        os.environ["RA_IO_SEQUENTIAL"] = "1"
+        t_fresh_seq = _best_of(lambda: ra.read(p))
+        _clear_env()
+        t_fresh_par = _best_of(lambda: ra.read(p))
+        rows.append({"bench": "engine", "case": "read_256mb_fresh_alloc",
+                     "mode": "sequential", "seconds": t_fresh_seq,
+                     "mb_s": mb / t_fresh_seq, "speedup": 1.0})
+        rows.append({"bench": "engine", "case": "read_256mb_fresh_alloc",
+                     "mode": "parallel", "seconds": t_fresh_par,
+                     "mb_s": mb / t_fresh_par, "speedup": t_fresh_seq / t_fresh_par})
+        del big
+
+        # ---- case 2: multi-shard read_slice ------------------------------
+        arr = out.reshape(-1, 4096)  # reuse the 256 MiB of bytes as rows
+        sd = os.path.join(d, "shards")
+        ra.write_sharded(sd, arr, nshards=nshards)
+        idx = ra.load_index(sd)
+        lo, hi = arr.shape[0] // 16, arr.shape[0] - arr.shape[0] // 16  # 7/8 span
+        smb = (hi - lo) * arr.shape[1] / 2**20
+        ra.read_slice_naive(sd, lo, hi)  # warm
+        t_naive = _best_of(lambda: ra.read_slice_naive(sd, lo, hi))
+        sout = np.empty((hi - lo, arr.shape[1]), arr.dtype)
+        ra.read_slice(sd, lo, hi, idx, out=sout)  # fault the destination once
+        t_par = _best_of(lambda: ra.read_slice(sd, lo, hi, idx, out=sout))
+        assert np.array_equal(sout, arr[lo:hi])  # equivalence, not just speed
+        rows.append({"bench": "engine", "case": "read_slice", "mode": "sequential",
+                     "seconds": t_naive, "mb_s": smb / t_naive, "speedup": 1.0,
+                     "nshards": nshards})
+        rows.append({"bench": "engine", "case": "read_slice", "mode": "parallel",
+                     "seconds": t_par, "mb_s": smb / t_par,
+                     "speedup": t_naive / t_par, "nshards": nshards})
+        del out, arr, sout
+        os.unlink(p)  # release page cache held by cases 1-2 before timing 3
+        shutil.rmtree(sd, ignore_errors=True)
+
+        # ---- case 3: loader gather-mode batches/s ------------------------
+        # dataset large enough that the seed's per-batch O(dataset)
+        # permutation recompute and per-batch allocation are visible, as they
+        # are in real training
+        n_docs, seq_len = (65536, 1024) if full else (32768, 1024)
+        root = os.path.join(d, "ds")
+        w = RaDatasetWriter(root, {"tokens": ((seq_len,), "uint32")}, shard_rows=4096)
+        rng = np.random.default_rng(0)
+        for lo_ in range(0, n_docs, 4096):
+            w.append(tokens=rng.integers(0, 50000, size=(4096, seq_len), dtype=np.uint32))
+        w.finish()
+        batch, steps = 256, 60
+
+        def loader_rate(**kw) -> float:
+            best = 0.0
+            for _ in range(3):
+                ds = RaDataset(root)
+                dl = DataLoader(ds, batch, seed=1, **kw)
+                for _ in range(5):  # warm prefetch + buffers
+                    next(dl)
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    next(dl)
+                dt = time.perf_counter() - t0
+                dl.stop()
+                ds.close()
+                best = max(best, steps / dt)
+            return best
+
+        naive_bps = loader_rate(naive=True)
+        engine_bps = loader_rate(reuse_buffers=True)
+        rows.append({"bench": "engine", "case": "loader_gather", "mode": "sequential",
+                     "batches_per_s": naive_bps, "batch": batch, "speedup": 1.0})
+        rows.append({"bench": "engine", "case": "loader_gather", "mode": "parallel",
+                     "batches_per_s": engine_bps, "batch": batch,
+                     "speedup": engine_bps / naive_bps})
+
+        rows.append({"bench": "engine-summary", "case": "read_256mb",
+                     "speedup": seq_s / best_par})
+        rows.append({"bench": "engine-summary", "case": "read_slice",
+                     "speedup": t_naive / t_par})
+        rows.append({"bench": "engine-summary", "case": "loader_gather",
+                     "speedup": engine_bps / naive_bps})
+    finally:
+        _clear_env()
+        shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def write_bench_io(rows: List[Dict], path: str = None) -> str:
+    """Persist the engine rows as BENCH_IO.json (repo root) so the perf
+    trajectory is tracked PR over PR."""
+    import json
+
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                            "BENCH_IO.json")
+    payload = {
+        "bench": "engine",
+        "rows": [r for r in rows if r["bench"].startswith("engine")],
+        "workers_default": engine.workers(),
+        "cpu_count": os.cpu_count(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def derive_speedups(rows: List[Dict]) -> List[Dict]:
     out = []
     for regime in ("vectors", "images", "matrix"):
@@ -163,3 +332,33 @@ def derive_speedups(rows: List[Dict]) -> List[Dict]:
                 }
             )
     return out
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="RawArray format + I/O engine benches")
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (default)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--formats", action="store_true",
+                    help="also run the paper Fig 1-2 format comparison")
+    args = ap.parse_args(argv)
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
+
+    rows = bench_engine(full=args.full)
+    for r in rows:
+        keys = [k for k in r if k != "bench"]
+        print(r["bench"] + "," + ",".join(f"{k}={r[k]}" for k in keys))
+    out = write_bench_io(rows)
+    print(f"# wrote {out}")
+    if args.formats:
+        frows = bench_formats(full=args.full)
+        frows += derive_speedups(frows)
+        for r in frows:
+            keys = [k for k in r if k != "bench"]
+            print(r["bench"] + "," + ",".join(f"{k}={r[k]}" for k in keys))
+
+
+if __name__ == "__main__":
+    main()

@@ -25,17 +25,33 @@ def _print_rows(rows):
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true", help="paper-scale sizes")
-    p.add_argument("--only", default=None, help="formats|images|pipeline|checkpoint|roofline")
+    p.add_argument("--quick", action="store_true",
+                   help="reduced sizes (the default; explicit flag for CI smoke runs)")
+    p.add_argument("--only", default=None,
+                   help="engine|formats|images|pipeline|checkpoint|roofline")
     args = p.parse_args(argv)
+    if args.quick and args.full:
+        p.error("--quick and --full are mutually exclusive")
 
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks.bench_formats import bench_formats, derive_speedups
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(repo, "src"))
+    sys.path.insert(0, repo)  # so `benchmarks.*` imports work when run as a script
+    from benchmarks.bench_formats import bench_engine, bench_formats, derive_speedups, write_bench_io
     from benchmarks.bench_images import bench_images
     from benchmarks.bench_pipeline import bench_checkpoint, bench_pipeline
 
     all_rows = []
-    wanted = args.only.split(",") if args.only else ["formats", "images", "pipeline", "checkpoint", "roofline"]
+    wanted = (
+        args.only.split(",")
+        if args.only
+        else ["engine", "formats", "images", "pipeline", "checkpoint", "roofline"]
+    )
 
+    if "engine" in wanted:
+        rows = bench_engine(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_io(rows)}")
     if "formats" in wanted:
         rows = bench_formats(full=args.full)
         rows += derive_speedups(rows)

@@ -45,7 +45,8 @@ def main() -> None:
     print(f"[data] {len(ds)} docs x {ds.fields['tokens']['shape'][0]} tokens (mmap)")
 
     model = build_model(cfg)
-    loader = DataLoader(ds, args.batch, seed=0)
+    # safe to reuse batch buffers: the loop moves each batch to device first
+    loader = DataLoader(ds, args.batch, seed=0, reuse_buffers=True)
     loop = TrainLoopConfig(
         steps=args.steps,
         ckpt_every=50,

@@ -42,19 +42,23 @@ MANIFEST = "manifest.json"
 _SEP = "__"
 
 
+def _leaf_name(path: Any, prefix: str) -> str:
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(str(k.key))
+        elif hasattr(k, "idx"):
+            keys.append(str(k.idx))
+        else:
+            keys.append(str(k))
+    return prefix + _SEP + _SEP.join(keys) if keys else prefix
+
+
 def _flatten(tree: Any, prefix: str) -> Dict[str, np.ndarray]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        keys = []
-        for k in path:
-            if hasattr(k, "key"):
-                keys.append(str(k.key))
-            elif hasattr(k, "idx"):
-                keys.append(str(k.idx))
-            else:
-                keys.append(str(k))
-        flat[prefix + _SEP + _SEP.join(keys) if keys else prefix] = leaf
-    return flat
+    return {
+        _leaf_name(path, prefix): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    }
 
 
 def _leaf_to_numpy(x) -> np.ndarray:
@@ -89,15 +93,20 @@ def save_checkpoint(
         "extra": extra or {},
         "time": time.time(),
     }
+    # leaf writes go wide over the shared engine pool (DESIGN.md §8); each
+    # write falls back to sequential I/O internally while on a pool thread
+    write_tasks = []
     for name, leaf in leaves.items():
         arr = _leaf_to_numpy(leaf)
         fname = name + ".ra"
-        ra.write(os.path.join(tmp, fname), arr, crc32=crc32)
+        fpath = os.path.join(tmp, fname)
+        write_tasks.append(lambda p=fpath, a=arr: ra.write(p, a, crc32=crc32))
         manifest["leaves"][name] = {
             "file": fname,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype) if arr.dtype.names is None else "void",
         }
+    ra.engine.run_tasks(write_tasks)
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
         f.flush()
@@ -108,6 +117,38 @@ def save_checkpoint(
     return final
 
 
+def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str]) -> Dict[str, np.ndarray]:
+    """Stream many leaf files into preallocated arrays in ONE engine wave:
+    cross-file and intra-file slab parallelism share the pool (DESIGN.md §8)."""
+    arrays: Dict[str, np.ndarray] = {}
+    jobs = []
+    fds: List[int] = []
+    fallback: List[Tuple[str, str]] = []
+    try:
+        for name in names:
+            entry = manifest["leaves"][name]
+            fpath = os.path.join(path, entry["file"])
+            hdr = ra.header_of(fpath)
+            plain = not (hdr.flags & (ra.FLAG_ZLIB | ra.FLAG_CRC32_TRAILER)) and not hdr.big_endian
+            if not plain:
+                fallback.append((name, fpath))
+                continue
+            arr = np.empty(hdr.shape, hdr.dtype())
+            arrays[name] = arr
+            if hdr.data_length:
+                fd = os.open(fpath, os.O_RDONLY)
+                fds.append(fd)
+                mv = memoryview(arr.reshape(-1).view(np.uint8)).cast("B")
+                jobs.append((fd, hdr.nbytes, mv))
+        ra.engine.parallel_read_spans(jobs)
+    finally:
+        for fd in fds:
+            os.close(fd)
+    for name, fpath in fallback:
+        arrays[name] = np.asarray(ra.read(fpath))
+    return arrays
+
+
 def load_checkpoint(
     path: str,
     params_like: Any,
@@ -115,30 +156,31 @@ def load_checkpoint(
     *,
     mmap: bool = True,
 ) -> Tuple[Any, Any, Dict[str, Any]]:
-    """Restore into the structure of ``params_like`` (shape tree or pytree)."""
+    """Restore into the structure of ``params_like`` (shape tree or pytree).
+
+    With ``mmap=True`` (default) every leaf is streamed into a preallocated
+    array by one parallel engine wave over all leaf files; ``mmap=False``
+    keeps the simple per-leaf ``ra.read`` path."""
     with open(os.path.join(path, MANIFEST)) as f:
         manifest = json.load(f)
 
     def restore(tree: Any, prefix: str) -> Any:
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        names = [_leaf_name(pth, prefix) for pth, _ in flat]
+        if mmap:
+            arrays = _read_leaves_parallel(path, manifest, names)
+        else:
+            arrays = {
+                n: np.asarray(ra.read(os.path.join(path, manifest["leaves"][n]["file"])))
+                for n in names
+            }
         out = []
-        for pth, like in flat:
-            keys = []
-            for k in pth:
-                if hasattr(k, "key"):
-                    keys.append(str(k.key))
-                elif hasattr(k, "idx"):
-                    keys.append(str(k.idx))
-                else:
-                    keys.append(str(k))
-            name = prefix + _SEP + _SEP.join(keys) if keys else prefix
-            entry = manifest["leaves"][name]
-            fpath = os.path.join(path, entry["file"])
-            arr = ra.memmap(fpath) if mmap else ra.read(fpath)
+        for name, (pth, like) in zip(names, flat):
+            arr = arrays[name]
             want = tuple(like.shape)
             if tuple(arr.shape) != want:
                 raise ValueError(f"{name}: checkpoint {arr.shape} vs model {want}")
-            out.append(np.asarray(arr))
+            out.append(arr)
         return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree), out)
 
     params = restore(params_like, "param")

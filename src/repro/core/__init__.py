@@ -8,6 +8,7 @@ Public API mirrors the paper's reference implementations::
     m = ra.memmap("x.ra")          # zero-copy
 """
 
+from . import engine
 from .header import Header, decode_header, read_header
 from .io import (
     append_metadata,
@@ -16,11 +17,19 @@ from .io import (
     memmap_slice,
     nbytes_on_disk,
     read,
+    read_into,
     read_metadata,
     write,
     write_like,
 )
-from .sharded import ShardIndex, load_index, read_sharded, read_slice, write_sharded
+from .sharded import (
+    ShardIndex,
+    load_index,
+    read_sharded,
+    read_slice,
+    read_slice_naive,
+    write_sharded,
+)
 from .spec import (
     ELTYPE_BRAIN,
     ELTYPE_COMPLEX,
@@ -38,9 +47,11 @@ from .spec import (
 
 __all__ = [
     "Header",
+    "engine",
     "read_header",
     "decode_header",
     "read",
+    "read_into",
     "write",
     "memmap",
     "memmap_slice",
@@ -52,6 +63,7 @@ __all__ = [
     "write_sharded",
     "read_sharded",
     "read_slice",
+    "read_slice_naive",
     "load_index",
     "ShardIndex",
     "MAGIC",

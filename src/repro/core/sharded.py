@@ -14,7 +14,8 @@ system directory structure". A sharded store is exactly that — a directory::
 Each shard is an independent, self-describing RawArray file, so shards can
 be written in parallel by different hosts and read back under a *different*
 slicing (elastic restore): ``read_slice`` touches only the shards that
-overlap the requested row range, via mmap.
+overlap the requested row range, fanning the overlapping shards out over
+the parallel I/O engine straight into one output buffer (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -27,6 +28,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import engine
 from . import io as raio
 from .spec import RawArrayError
 
@@ -120,17 +122,110 @@ def load_index(dirpath: str) -> ShardIndex:
         return ShardIndex.from_json(f.read())
 
 
-def read_slice(dirpath: str, start: int, stop: int, index: Optional[ShardIndex] = None) -> np.ndarray:
+def _stored_rest(idx: ShardIndex) -> Tuple[int, ...]:
+    """Per-row shape of the on-disk (axis-moved-to-front) layout."""
+    s = list(idx.shape)
+    if idx.axis < len(s):
+        s.pop(idx.axis)
+    else:
+        s = s[1:]
+    return tuple(s)
+
+
+def _empty_slice(idx: ShardIndex) -> np.ndarray:
+    shape = list(idx.shape)
+    if idx.axis < len(shape):
+        shape[idx.axis] = 0
+    else:
+        shape = [0] + shape[1:]
+    return np.empty(tuple(shape), dtype=np.dtype(idx.dtype))
+
+
+def read_slice(
+    dirpath: str,
+    start: int,
+    stop: int,
+    index: Optional[ShardIndex] = None,
+    *,
+    out: Optional[np.ndarray] = None,
+) -> np.ndarray:
     """Read rows [start, stop) along the shard axis, touching only the shards
-    that overlap — the elastic-restore primitive."""
+    that overlap — the elastic-restore primitive.
+
+    Overlapping shards are read concurrently (one engine wave, DESIGN.md §8)
+    straight into a single output buffer — no per-shard intermediate arrays
+    and no ``np.concatenate``. Pass ``out`` (C-contiguous, the result's exact
+    shape and dtype) to stream into a preallocated / reused destination.
+    """
     idx = index or load_index(dirpath)
-    n = idx.shape[idx.axis] if idx.axis < len(idx.shape) else idx.offsets[-1]
     start, stop = max(0, start), min(stop, idx.offsets[-1])
     if stop <= start:
-        inner = list(idx.shape)
-        inner[idx.axis if idx.axis == 0 else 0] = 0
-        return np.empty((0,) + tuple(idx.shape[1:]), dtype=np.dtype(idx.dtype))
-    del n
+        return _empty_slice(idx)
+    nrows = stop - start
+    rest = _stored_rest(idx)
+    dtype = np.dtype(idx.dtype)
+    stored_shape = (nrows,) + rest
+    if idx.axis == 0 and out is not None:
+        if tuple(out.shape) != stored_shape or out.dtype != dtype or not out.flags.c_contiguous:
+            raise RawArrayError(
+                f"read_slice: out must be C-contiguous {stored_shape} {dtype}, "
+                f"got {out.shape} {out.dtype}"
+            )
+        stored = out
+    else:
+        stored = np.empty(stored_shape, dtype)
+    row_nbytes = dtype.itemsize
+    for d in rest:
+        row_nbytes *= d
+    mv = memoryview(stored.reshape(-1).view(np.uint8)).cast("B") if row_nbytes else None
+    offs = idx.offsets
+    fds: List[int] = []
+    jobs = []
+    try:
+        for i, fname in enumerate(idx.files):
+            lo, hi = offs[i], offs[i + 1]
+            if hi <= start or lo >= stop:
+                continue
+            path = os.path.join(dirpath, fname)
+            hdr = raio.header_of(path)
+            if hdr.shape[1:] != rest or hdr.shape[0] != hi - lo:
+                raise RawArrayError(
+                    f"{fname}: shard shape {hdr.shape} inconsistent with index"
+                )
+            a, b = max(start, lo) - lo, min(stop, hi) - lo
+            if row_nbytes == 0 or b == a:
+                continue
+            fd = os.open(path, os.O_RDONLY)
+            fds.append(fd)
+            dst = mv[(lo + a - start) * row_nbytes : (lo + b - start) * row_nbytes]
+            jobs.append((fd, hdr.nbytes + a * row_nbytes, dst))
+        engine.parallel_read_spans(jobs)
+    finally:
+        for fd in fds:
+            os.close(fd)
+    result = stored
+    if idx.axis != 0:
+        result = np.moveaxis(result.reshape((nrows,) + rest), 0, idx.axis)
+        if out is not None:
+            if tuple(out.shape) != result.shape or out.dtype != dtype:
+                raise RawArrayError(
+                    f"read_slice: out shape {out.shape} != result {result.shape}"
+                )
+            out[...] = result
+            result = out
+    return result
+
+
+def read_slice_naive(
+    dirpath: str, start: int, stop: int, index: Optional[ShardIndex] = None
+) -> np.ndarray:
+    """Reference single-stream implementation (mmap each overlapping shard,
+    then concatenate). Kept for equivalence tests and as the sequential
+    baseline in ``benchmarks/bench_formats.py``."""
+    idx = index or load_index(dirpath)
+    start, stop = max(0, start), min(stop, idx.offsets[-1])
+    if stop <= start:
+        return _empty_slice(idx)
     pieces: List[np.ndarray] = []
     offs = idx.offsets
     for i, fname in enumerate(idx.files):

@@ -27,6 +27,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .. import core as ra
+from ..core import engine
 
 MANIFEST = "manifest.json"
 
@@ -101,8 +102,15 @@ class _Shard:
 
 
 class RaDataset:
-    """Random-access reader over a shard directory. All reads are memory-
-    mapped row-range slices (zero decode, zero copy until touched)."""
+    """Random-access reader over a shard directory.
+
+    Contiguous reads (``rows``) go through the parallel I/O engine in one
+    wave of positioned preads straight into the output batch buffer; random
+    gathers (``gather``) are planned by ``engine.coalesce`` — dense index
+    runs become ranged reads, sparse leftovers fall back to fancy indexing
+    on the cached per-shard mmaps (DESIGN.md §8). Both accept ``out=`` so a
+    loader can stream into reused, pre-faulted batch arrays.
+    """
 
     def __init__(self, root: str):
         self.root = root
@@ -117,10 +125,28 @@ class RaDataset:
             self.shards.append(_Shard(rows=s["rows"], files=s["files"], row_offset=off))
             off += s["rows"]
         self.total_rows = off
+        self._bounds = np.array([s.row_offset for s in self.shards] + [off])
         self._mmaps: Dict[Tuple[int, str], np.ndarray] = {}
+        # (shard, field) -> (fd, data_offset, row_nbytes) for positioned reads
+        self._fds: Dict[Tuple[int, str], Tuple[int, int, int]] = {}
 
     def __len__(self) -> int:
         return self.total_rows
+
+    def close(self) -> None:
+        for fd, _, _ in self._fds.values():
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+        self._fds.clear()
+        self._mmaps.clear()
+
+    def __del__(self):  # best-effort fd cleanup
+        try:
+            self.close()
+        except Exception:
+            pass
 
     def _mmap(self, shard_idx: int, field: str) -> np.ndarray:
         key = (shard_idx, field)
@@ -129,23 +155,168 @@ class RaDataset:
             self._mmaps[key] = ra.memmap(path)
         return self._mmaps[key]
 
-    def rows(self, start: int, stop: int, fields: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
-        """Read global rows [start, stop) across shard boundaries."""
+    def _fmeta(self, shard_idx: int, field: str) -> Tuple[int, int, int]:
+        """(fd, payload offset, row bytes) for one shard file, cached."""
+        key = (shard_idx, field)
+        if key not in self._fds:
+            path = os.path.join(self.root, self.shards[shard_idx].files[field])
+            hdr = ra.header_of(path)
+            row_nbytes = hdr.elbyte
+            for d in hdr.shape[1:]:
+                row_nbytes *= d
+            self._fds[key] = (os.open(path, os.O_RDONLY), hdr.nbytes, row_nbytes)
+        return self._fds[key]
+
+    def _field_spec(self, field: str) -> Tuple[Tuple[int, ...], np.dtype]:
+        info = self.fields[field]
+        return tuple(info["shape"]), np.dtype(info["dtype"])
+
+    def _dest(
+        self,
+        out: Optional[Dict[str, np.ndarray]],
+        field: str,
+        n: int,
+    ) -> np.ndarray:
+        rshape, dtype = self._field_spec(field)
+        want = (n,) + rshape
+        if out is not None and field in out:
+            dst = out[field]
+            if tuple(dst.shape) != want or dst.dtype != dtype or not dst.flags.c_contiguous:
+                raise ra.RawArrayError(
+                    f"{field}: out must be C-contiguous {want} {dtype}, "
+                    f"got {dst.shape} {dst.dtype}"
+                )
+            return dst
+        return np.empty(want, dtype)
+
+    def rows(
+        self,
+        start: int,
+        stop: int,
+        fields: Optional[Sequence[str]] = None,
+        *,
+        out: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Read global rows [start, stop) across shard boundaries — one
+        engine wave of positioned reads into a single buffer per field."""
         fields = list(fields or self.fields)
-        out: Dict[str, List[np.ndarray]] = {f: [] for f in fields}
+        start, stop = max(0, start), min(stop, self.total_rows)
+        n = max(0, stop - start)
+        result = {f: self._dest(out, f, n) for f in fields}
+        if n == 0:
+            return result
+        jobs = []
         for i, sh in enumerate(self.shards):
             lo, hi = sh.row_offset, sh.row_offset + sh.rows
             if hi <= start or lo >= stop:
                 continue
             a, b = max(start, lo) - lo, min(stop, hi) - lo
             for f in fields:
-                out[f].append(np.asarray(self._mmap(i, f)[a:b]))
-        return {
-            f: (v[0] if len(v) == 1 else np.concatenate(v, axis=0)) for f, v in out.items()
-        }
+                fd, doff, rnb = self._fmeta(i, f)
+                if rnb == 0:
+                    continue
+                dst = result[f]
+                mv = memoryview(dst.reshape(-1).view(np.uint8)).cast("B")
+                o = lo + a - start
+                jobs.append((fd, doff + a * rnb, mv[o * rnb : (o + b - a) * rnb]))
+        engine.parallel_read_spans(jobs)
+        return result
 
-    def gather(self, indices: np.ndarray, fields: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
-        """Gather arbitrary global rows (shuffled access)."""
+    def gather(
+        self,
+        indices: np.ndarray,
+        fields: Optional[Sequence[str]] = None,
+        *,
+        out: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Gather arbitrary global rows (shuffled access).
+
+        Per shard, ``engine.coalesce`` merges near-adjacent requests into
+        ranged positioned reads (served from reusable scratch buffers, or
+        read directly into the output when the destination rows line up);
+        requests too sparse to coalesce fall back to fancy indexing on the
+        cached mmap — the planner never reads more than ``gap+1`` times the
+        requested bytes."""
+        fields = list(fields or self.fields)
+        indices = np.asarray(indices, dtype=np.int64)
+        n = len(indices)
+        result = {f: self._dest(out, f, n) for f in fields}
+        if n == 0:
+            return result
+        # one global sort; shard membership is then a searchsorted over the
+        # sorted values (no per-shard masks), and per-shard slices arrive
+        # pre-sorted for the planner and for page-local fancy indexing
+        order = np.argsort(indices, kind="stable")
+        sidx = indices[order]
+        cuts = np.searchsorted(sidx, self._bounds)
+        # the plan depends only on the indices, not the field: compute once
+        # per shard, reuse for every field
+        plans = []  # (si, runs, leftover)
+        for si in range(len(self.shards)):
+            a, b = cuts[si], cuts[si + 1]
+            if a == b:
+                continue
+            local = sidx[a:b] - self.shards[si].row_offset
+            runs, leftover = engine.coalesce_sorted(local, np.arange(a, b))
+            plans.append((si, runs, leftover))
+        tasks = []
+        fancy = []  # deferred sparse leftovers: (si, field, positions, local)
+        for f in fields:
+            rshape, dtype = self._field_spec(f)
+            sample = result[f]
+            for si, runs, leftover in plans:
+                if runs:
+                    fd, doff, rnb = self._fmeta(si, f)
+                    for run in runs:
+                        tasks.append(
+                            self._run_task(run, sidx, order, sample, rshape, dtype,
+                                           fd, doff, rnb, self.shards[si].row_offset)
+                        )
+                if leftover.size:
+                    fancy.append((si, f, order[leftover], sidx[leftover]
+                                  - self.shards[si].row_offset))
+        engine.run_tasks(tasks)
+        for si, f, pos, loc in fancy:
+            result[f][pos] = self._mmap(si, f)[loc]
+        return result
+
+    @staticmethod
+    def _run_task(run, sidx, order, sample, rshape, dtype, fd, doff, rnb, row_off):
+        """Closure for one coalesced ranged read (executed on the pool).
+        ``run.sel`` points into the dataset-wide sorted arrays."""
+
+        def task():
+            lo, hi, sel = run
+            span = hi - lo
+            want = span * rnb
+            pos_sel = order[sel]
+            loc_sel = sidx[sel] - row_off
+            p0 = int(pos_sel[0])
+            direct = (
+                span == len(sel)
+                and np.array_equal(loc_sel, np.arange(lo, hi))
+                and np.array_equal(pos_sel, np.arange(p0, p0 + span))
+            )
+            if direct:
+                # destination rows are contiguous and in order: zero-copy read
+                mv = memoryview(sample.reshape(-1).view(np.uint8)).cast("B")
+                engine.pread_into(fd, doff + lo * rnb, mv[p0 * rnb : p0 * rnb + want])
+                return
+            scratch = engine.acquire_scratch(want)
+            try:
+                engine.pread_into(fd, doff + lo * rnb, memoryview(scratch)[:want])
+                rows_arr = scratch[:want].view(dtype).reshape((span,) + rshape)
+                sample[pos_sel] = rows_arr[loc_sel - lo]
+            finally:
+                engine.release_scratch(scratch)
+
+        return task
+
+    def gather_naive(
+        self, indices: np.ndarray, fields: Optional[Sequence[str]] = None
+    ) -> Dict[str, np.ndarray]:
+        """Reference per-row fancy-indexing gather (the pre-engine path).
+        Kept for equivalence tests and as the benchmark baseline."""
         fields = list(fields or self.fields)
         indices = np.asarray(indices)
         bounds = np.array([s.row_offset for s in self.shards] + [self.total_rows])

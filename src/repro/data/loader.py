@@ -5,8 +5,15 @@
 * **Resumability**: `LoaderState` (epoch, step) checkpoints with the model;
   `DataLoader.restore(state)` resumes mid-epoch exactly.
 * **Prefetch**: a background thread keeps ``prefetch`` batches ready, so
-  host-side mmap reads overlap device compute (the paper's I/O latency win,
+  host-side reads overlap device compute (the paper's I/O latency win,
   applied where it matters in training).
+* **Buffer reuse** (``reuse_buffers=True``): the prefetch thread cycles
+  through ``prefetch + 2`` preallocated batch buffers and streams each batch
+  into them via ``RaDataset.gather/rows(out=...)`` — no per-batch allocation,
+  no page-fault storm (DESIGN.md §8). The emitted arrays alias the ring, so
+  a consumer must finish with (or copy) a batch before advancing more than
+  ``prefetch + 1`` steps; that is exactly the train-loop pattern. Defaults to
+  off to preserve the seed's value semantics.
 * **Straggler visibility**: the loader tracks wait-time (device starved) vs
   ready-time; exported in ``stats()`` for the train-loop straggler monitor.
 """
@@ -49,6 +56,8 @@ class DataLoader:
         host_count: int = 1,
         prefetch: int = 2,
         drop_last: bool = True,
+        reuse_buffers: bool = False,
+        naive: bool = False,
     ):
         if not drop_last:
             raise NotImplementedError("fixed-shape training wants drop_last")
@@ -59,6 +68,10 @@ class DataLoader:
         self.host_id = host_id
         self.host_count = host_count
         self.prefetch = prefetch
+        self.reuse_buffers = reuse_buffers and not naive
+        self.naive = naive  # seed-era produce path (benchmark baseline)
+        self._ring: list = []  # preallocated batch dicts when reuse_buffers
+        self._ring_pos = 0
         self.state = LoaderState()
         self._wait_s = 0.0
         self._produce_s = 0.0
@@ -79,17 +92,50 @@ class DataLoader:
         rng = np.random.default_rng((self.seed, epoch))
         return rng.permutation(rows)
 
+    def _cached_order(self, epoch: int) -> np.ndarray:
+        """The permutation is a pure function of (seed, epoch): compute it
+        once per epoch, not once per batch (the seed path recomputed it every
+        ``_produce`` — measurable at high batch rates)."""
+        cached = getattr(self, "_order_memo", None)
+        if cached is None or cached[0] != epoch:
+            self._order_memo = (epoch, self._epoch_order(epoch))
+        return self._order_memo[1]
+
     def steps_per_epoch(self) -> int:
         return len(self._host_rows()) // self.batch_size
 
     # ---- synchronous iteration ---------------------------------------------
+    def _next_buffer(self) -> Optional[Dict[str, np.ndarray]]:
+        """Round-robin over prefetch+2 preallocated batch dicts: one held by
+        the consumer, up to ``prefetch`` queued, one being filled."""
+        if not self.reuse_buffers:
+            return None
+        if not self._ring:
+            nbufs = self.prefetch + 2
+            for _ in range(nbufs):
+                self._ring.append(
+                    {
+                        f: np.empty((self.batch_size,) + tuple(i["shape"]), i["dtype"])
+                        for f, i in self.ds.fields.items()
+                    }
+                )
+        buf = self._ring[self._ring_pos % len(self._ring)]
+        self._ring_pos += 1
+        return buf
+
     def _produce(self, epoch: int, step: int) -> Dict[str, np.ndarray]:
-        order = self._epoch_order(epoch)
+        if self.naive:
+            order = self._epoch_order(epoch)  # seed behavior: fresh every batch
+        else:
+            order = self._cached_order(epoch)
         lo = step * self.batch_size
         idx = order[lo : lo + self.batch_size]
+        if self.naive and self.shuffle:
+            return self.ds.gather_naive(idx)
+        out = self._next_buffer()
         if self.shuffle:
-            return self.ds.gather(idx)
-        return self.ds.rows(int(idx[0]), int(idx[-1]) + 1)
+            return self.ds.gather(idx, out=out)
+        return self.ds.rows(int(idx[0]), int(idx[-1]) + 1, out=out)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x exposes this as TPUCompilerParams; newer jax as CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, scale_ref, bias_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
@@ -46,7 +49,7 @@ def dequant_u8_fwd(
         ],
         out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, C), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -37,7 +37,9 @@ def main(argv=None) -> int:
     ds_root = args.dataset or os.path.join(args.workdir, "dataset")
     if not os.path.exists(os.path.join(ds_root, "manifest.json")):
         make_token_dataset(ds_root, n_docs=2048, seq_len=min(256, cfg.max_seq), vocab=cfg.vocab)
-    loader = DataLoader(RaDataset(ds_root), args.batch, seed=args.seed)
+    # reuse_buffers is safe here: the train loop copies each batch to device
+    # (jnp.asarray) before requesting the next one
+    loader = DataLoader(RaDataset(ds_root), args.batch, seed=args.seed, reuse_buffers=True)
     out = train(
         build_model(cfg),
         loader,

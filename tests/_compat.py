@@ -1,0 +1,110 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+Four seed test modules property-test with hypothesis; the package isn't a
+hard dependency of this repo, so ``tests/conftest.py`` falls back to this
+shim: each strategy draws deterministic pseudo-random examples (boundary
+values first), and ``@given`` turns the test into a fixed example-based
+loop. It covers exactly the API surface the suite uses — ``given``,
+``settings``, and ``strategies.{integers,floats,booleans,sampled_from,
+lists,binary}``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, List
+
+_EXAMPLE_CAP = 15  # keep the fallback suite fast; hypothesis itself runs more
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any], boundary: List[Any]):
+        self._draw = draw
+        self._boundary = boundary
+
+    def example(self, rng: random.Random, i: int) -> Any:
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        bound = [min_value, max_value] if min_value != max_value else [min_value]
+        return _Strategy(lambda r: r.randint(min_value, max_value), bound)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        bound = [min_value, max_value]
+        return _Strategy(lambda r: r.uniform(min_value, max_value), bound)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda r: bool(r.getrandbits(1)), [False, True])
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements), elements[:2])
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(r: random.Random):
+            n = r.randint(min_size, max_size)
+            return [elem.example(r, len(elem._boundary)) for _ in range(n)]
+
+        bound: List[Any] = []
+        if min_size == 0:
+            bound.append([])
+        bound.append([elem.example(random.Random(0), 0) for _ in range(max(min_size, 1))])
+        return _Strategy(draw, bound)
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(r: random.Random):
+            n = r.randint(min_size, max_size)
+            return bytes(r.getrandbits(8) for _ in range(n))
+
+        bound = [b""] if min_size == 0 else []
+        return _Strategy(draw, bound)
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = _EXAMPLE_CAP, **_ignored):
+    """Accepts and mostly ignores hypothesis settings; caps example count."""
+
+    def deco(fn):
+        fn._compat_max_examples = min(max_examples, _EXAMPLE_CAP)
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test once per deterministic example of each strategy kwarg.
+
+    Pytest fixtures in the remaining parameters pass through untouched: the
+    wrapper's reported signature drops the strategy-driven arguments.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **fixture_kwargs):
+            n = getattr(wrapper, "_compat_max_examples", _EXAMPLE_CAP)
+            for i in range(n):
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}:{i}")
+                drawn = {k: s.example(rng, i) for k, s in strategy_kwargs.items()}
+                fn(*args, **fixture_kwargs, **drawn)
+
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__  # keep pytest from seeing the original signature
+        return wrapper
+
+    return deco

@@ -13,8 +13,17 @@ from repro.distributed.partition import opt_state_specs, param_specs
 from repro.launch.hlo_analysis import collective_stats, computation_multipliers, split_computations
 from repro.models import build_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax 0.4.x constructs AbstractMesh from (name, size) pairs; newer jax takes
+# (axis_sizes, axis_names). Support both so the suite runs across versions.
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH_MP = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, axes):
