@@ -1,0 +1,183 @@
+"""Remote data plane benchmark (DESIGN.md §9) — loopback, real sockets.
+
+Serves a >= 64 MiB RawArray over the in-tree byte-range server and measures
+four ways of getting it back:
+
+  local_parallel    local engine read (context: what the wire costs at all)
+  remote_naive      single-stream baseline: one block-sized range request
+                    at a time on ONE connection (``pread_into_naive``) —
+                    the naive remote client every block-oriented reader
+                    ships
+  remote_stream     one whole-payload GET on one connection (curl-style)
+  remote_parallel   cold engine-planned multi-range fetch: slabs fanned
+                    over pooled connections, block cache filling
+  remote_warm       the same read again with the block cache hot, streamed
+                    into a reused (pre-faulted) buffer — the epoch-2 path
+
+Acceptance (ISSUE 2): remote reads byte-identical to local ``read``;
+``remote_parallel`` >= 2x ``remote_naive``; ``remote_warm`` >= 5x the cold
+remote read. The run *fails loudly* on a byte mismatch — this doubles as
+the CI remote smoke.
+
+Writes ``BENCH_REMOTE.json`` at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_remote.py [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+import repro.core as ra
+from repro.core import engine
+from repro import remote
+from repro.remote.cache import BlockCache
+
+MIB = 1 << 20
+SCALES = {"paper": 256 * MIB, "quick": 64 * MIB}
+
+
+def _best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _row(mode: str, seconds: float, nbytes: int, **extra) -> Dict:
+    return {
+        "bench": "remote",
+        "mode": mode,
+        "seconds": round(seconds, 4),
+        "gbps": round(nbytes / seconds / 1e9, 3),
+        **extra,
+    }
+
+
+def bench_remote(full: bool = False) -> List[Dict]:
+    payload = SCALES["paper" if full else "quick"]
+    nfloats = payload // 4
+    reps = 2 if full else 3
+    d = tempfile.mkdtemp(prefix="ra_bench_remote_")
+    server = None
+    rows: List[Dict] = []
+    try:
+        rng = np.random.default_rng(0)
+        arr = rng.integers(0, 1 << 30, size=nfloats, dtype=np.uint32).view(np.float32)
+        path = os.path.join(d, "big.ra")
+        ra.write(path, arr)
+        server = remote.serve(d, port=0)
+        url = f"{server.url}/big.ra"
+        hdr = ra.header_of(path)
+
+        # context: the same payload through the local engine
+        t = _best(lambda: ra.read(path), reps)
+        rows.append(_row("local_parallel", t, payload))
+
+        # byte identity first — this run doubles as the CI remote smoke
+        remote.close_readers()
+        remote.reset_shared_cache()
+        got = ra.read(url)
+        if not (got.dtype == arr.dtype and np.array_equal(got, arr)):
+            raise RuntimeError("remote read is NOT byte-identical to local read")
+        del got
+
+        def naive():
+            with remote.RemoteReader(url, use_cache=False, conns=1) as r:
+                out = np.empty(nfloats, np.float32)
+                r.pread_into_naive(hdr.nbytes, memoryview(out).cast("B"))
+
+        t_naive = _best(naive, max(1, reps - 1))
+        rows.append(_row("naive_single_stream", t_naive, payload,
+                         block=BlockCache().block_bytes))
+
+        def stream():
+            with remote.RemoteReader(url, use_cache=False) as r:
+                out = np.empty(nfloats, np.float32)
+                r.pread_into(hdr.nbytes, memoryview(out).cast("B"))
+
+        t_stream = _best(stream, reps)
+        rows.append(_row("stream_one_shot", t_stream, payload))
+
+        def parallel_cold():
+            cache = BlockCache(capacity_bytes=payload + (8 << 20))
+            with remote.RemoteReader(url, cache=cache) as r:
+                out = np.empty(nfloats, np.float32)
+                engine.parallel_read_into(r, hdr.nbytes, memoryview(out).cast("B"))
+
+        t_cold = _best(parallel_cold, reps)
+        rows.append(_row("parallel_cold", t_cold, payload,
+                         chunk=engine.chunk_bytes(), conns=remote.client.default_conns()))
+
+        # warm: same reader, hot cache, reused pre-faulted destination
+        cache = BlockCache(capacity_bytes=payload + (8 << 20))
+        reader = remote.RemoteReader(url, cache=cache)
+        out = np.empty(nfloats, np.float32)
+        mv = memoryview(out).cast("B")
+        engine.parallel_read_into(reader, hdr.nbytes, mv)  # populate
+        t_warm = _best(lambda: engine.parallel_read_into(reader, hdr.nbytes, mv), reps + 2)
+        stats = cache.stats()
+        if not np.array_equal(out, arr):
+            raise RuntimeError("warm cached read is NOT byte-identical")
+        rows.append(_row("warm_cache", t_warm, payload,
+                         cache_hits=stats["hits"], cache_misses=stats["misses"],
+                         cache_evictions=stats["evictions"]))
+        reader.close()
+
+        rows.append(
+            {
+                "bench": "remote",
+                "mode": "summary",
+                "payload_mib": payload // MIB,
+                "identical": True,
+                "speedup_parallel_vs_single_stream": round(t_naive / t_cold, 2),
+                "speedup_parallel_vs_one_shot": round(t_stream / t_cold, 2),
+                "speedup_warm_vs_cold": round(t_cold / t_warm, 2),
+                "speedup_warm_vs_single_stream": round(t_naive / t_warm, 2),
+            }
+        )
+        return rows
+    finally:
+        if server is not None:
+            server.shutdown()
+            server.server_close()
+        remote.close_readers()
+        remote.reset_shared_cache()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def write_bench_remote(rows: List[Dict], path: str = None) -> str:
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                            "BENCH_REMOTE.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="paper-scale payload (256 MiB)")
+    args = p.parse_args(argv)
+    rows = bench_remote(full=args.full)
+    for r in rows:
+        keys = [k for k in r if k != "bench"]
+        print(r["bench"] + "," + ",".join(f"{k}={r[k]}" for k in keys))
+    print(f"# wrote {write_bench_remote(rows)}")
+
+
+if __name__ == "__main__":
+    main()

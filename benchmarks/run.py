@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|formats|images|pipeline|checkpoint|roofline")
+                   help="engine|remote|formats|images|pipeline|checkpoint|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -39,12 +39,13 @@ def main(argv=None) -> None:
     from benchmarks.bench_formats import bench_engine, bench_formats, derive_speedups, write_bench_io
     from benchmarks.bench_images import bench_images
     from benchmarks.bench_pipeline import bench_checkpoint, bench_pipeline
+    from benchmarks.bench_remote import bench_remote, write_bench_remote
 
     all_rows = []
     wanted = (
         args.only.split(",")
         if args.only
-        else ["engine", "formats", "images", "pipeline", "checkpoint", "roofline"]
+        else ["engine", "remote", "formats", "images", "pipeline", "checkpoint", "roofline"]
     )
 
     if "engine" in wanted:
@@ -52,6 +53,11 @@ def main(argv=None) -> None:
         _print_rows(rows)
         all_rows += rows
         print(f"# wrote {write_bench_io(rows)}")
+    if "remote" in wanted:
+        rows = bench_remote(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_remote(rows)}")
     if "formats" in wanted:
         rows = bench_formats(full=args.full)
         rows += derive_speedups(rows)

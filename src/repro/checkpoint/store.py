@@ -21,7 +21,12 @@ Design properties (DESIGN.md §2):
   after fsync — a killed job never leaves a half-written "latest";
 * **async save**: leaves are snapshotted to host RAM (np.asarray) and
   written by a background thread while training continues;
-* keep-last-k garbage collection.
+* keep-last-k garbage collection;
+* **remote restore** (DESIGN.md §9): ``load_checkpoint`` /
+  ``restore_resharded`` accept an ``http(s)://`` checkpoint-directory URL —
+  a fresh host cold-starts a model straight from a byte-range server, the
+  manifest over HTTP and every leaf streamed by the same one-wave engine
+  plan as local restore (saves remain local-only).
 """
 
 from __future__ import annotations
@@ -40,6 +45,17 @@ from .. import core as ra
 
 MANIFEST = "manifest.json"
 _SEP = "__"
+
+_join = ra.join_path
+
+
+def _load_manifest(path: str) -> Dict[str, Any]:
+    if ra.is_url(path):
+        from .. import remote
+
+        return json.loads(remote.fetch_bytes(_join(path, MANIFEST)))
+    with open(os.path.join(path, MANIFEST)) as f:
+        return json.load(f)
 
 
 def _leaf_name(path: Any, prefix: str) -> str:
@@ -75,6 +91,8 @@ def save_checkpoint(
     crc32: bool = False,
 ) -> str:
     """Synchronous atomic save. Returns the final checkpoint path."""
+    if ra.is_url(directory):
+        raise ra.RawArrayError("checkpoint saves are local-only; restore takes URLs")
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -124,11 +142,26 @@ def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str])
     jobs = []
     fds: List[int] = []
     fallback: List[Tuple[str, str]] = []
+    # resolve every leaf's (header, source) concurrently first: remotely each
+    # resolution costs 1-2 HTTP round trips, and a serial loop over hundreds
+    # of leaves would dominate cold-start latency before the wave begins
+    metas: Dict[str, Tuple[str, Any, Any]] = {}
+
+    def _resolve(name: str) -> None:
+        fpath = _join(path, manifest["leaves"][name]["file"])
+        hdr = ra.header_of(fpath)
+        src = None
+        plain = not (hdr.flags & (ra.FLAG_ZLIB | ra.FLAG_CRC32_TRAILER)) and not hdr.big_endian
+        if plain and hdr.data_length and ra.is_url(fpath):
+            from .. import remote
+
+            src = remote.get_reader(fpath)
+        metas[name] = (fpath, hdr, src)
+
+    ra.engine.run_tasks([(lambda n=n: _resolve(n)) for n in names])
     try:
         for name in names:
-            entry = manifest["leaves"][name]
-            fpath = os.path.join(path, entry["file"])
-            hdr = ra.header_of(fpath)
+            fpath, hdr, src = metas[name]
             plain = not (hdr.flags & (ra.FLAG_ZLIB | ra.FLAG_CRC32_TRAILER)) and not hdr.big_endian
             if not plain:
                 fallback.append((name, fpath))
@@ -136,10 +169,11 @@ def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str])
             arr = np.empty(hdr.shape, hdr.dtype())
             arrays[name] = arr
             if hdr.data_length:
-                fd = os.open(fpath, os.O_RDONLY)
-                fds.append(fd)
+                if src is None:
+                    src = os.open(fpath, os.O_RDONLY)
+                    fds.append(src)
                 mv = memoryview(arr.reshape(-1).view(np.uint8)).cast("B")
-                jobs.append((fd, hdr.nbytes, mv))
+                jobs.append((src, hdr.nbytes, mv))
         ra.engine.parallel_read_spans(jobs)
     finally:
         for fd in fds:
@@ -160,9 +194,9 @@ def load_checkpoint(
 
     With ``mmap=True`` (default) every leaf is streamed into a preallocated
     array by one parallel engine wave over all leaf files; ``mmap=False``
-    keeps the simple per-leaf ``ra.read`` path."""
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
+    keeps the simple per-leaf ``ra.read`` path. ``path`` may be an
+    ``http(s)://`` checkpoint URL — same wave plan, ranged reads."""
+    manifest = _load_manifest(path)
 
     def restore(tree: Any, prefix: str) -> Any:
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -171,7 +205,7 @@ def load_checkpoint(
             arrays = _read_leaves_parallel(path, manifest, names)
         else:
             arrays = {
-                n: np.asarray(ra.read(os.path.join(path, manifest["leaves"][n]["file"])))
+                n: np.asarray(ra.read(_join(path, manifest["leaves"][n]["file"])))
                 for n in names
             }
         out = []
@@ -197,13 +231,33 @@ def restore_resharded(
 ) -> np.ndarray:
     """Elastic restore: read only rows [start, stop) of one leaf — offset
     arithmetic on the .ra file, no full-array read (a different mesh's host
-    reads exactly its slice)."""
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
+    reads exactly its slice). Works on a checkpoint URL too: the row slab
+    becomes one ranged request."""
+    manifest = _load_manifest(path)
     entry = manifest["leaves"][name]
-    return np.asarray(
-        ra.memmap_slice(os.path.join(path, entry["file"]), row_start, row_stop)
-    )
+    fpath = _join(path, entry["file"])
+    if not ra.is_url(fpath):
+        return np.asarray(ra.memmap_slice(fpath, row_start, row_stop))
+    from .. import remote
+
+    hdr = ra.header_of(fpath)
+    if hdr.flags & ra.FLAG_ZLIB:
+        raise ra.RawArrayError("cannot row-slice a compressed payload")
+    if not hdr.shape:
+        raise ra.RawArrayError("cannot row-slice a 0-d array")
+    n = hdr.shape[0]
+    row_start, row_stop = max(0, row_start), min(row_stop, n)
+    if row_stop < row_start:
+        raise ra.RawArrayError(f"bad slice [{row_start}, {row_stop})")
+    row = hdr.elbyte
+    for d in hdr.shape[1:]:
+        row *= d
+    out = np.empty((row_stop - row_start,) + hdr.shape[1:], hdr.dtype())
+    if out.nbytes:
+        reader = remote.get_reader(fpath)
+        mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
+        ra.engine.parallel_read_into(reader, hdr.nbytes + row_start * row, mv)
+    return out
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -13,6 +13,8 @@ from .header import Header, decode_header, read_header
 from .io import (
     append_metadata,
     header_of,
+    is_url,
+    join_path,
     memmap,
     memmap_slice,
     nbytes_on_disk,
@@ -58,6 +60,8 @@ __all__ = [
     "read_metadata",
     "append_metadata",
     "header_of",
+    "is_url",
+    "join_path",
     "write_like",
     "nbytes_on_disk",
     "write_sharded",

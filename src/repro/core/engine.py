@@ -47,20 +47,13 @@ from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .spec import RawArrayError
+from .spec import RawArrayError, env_int as _env_int
 
 # Indirection points so tests can inject short reads/writes.
 _preadv = os.preadv
 _pwritev = os.pwritev
 
 _THREAD_PREFIX = "ra-io"
-
-
-def _env_int(name: str, default: int) -> int:
-    try:
-        return int(os.environ.get(name, ""))
-    except ValueError:
-        return default
 
 
 def workers() -> int:
@@ -156,9 +149,16 @@ def _writable_byte_view(view) -> memoryview:
     return mv
 
 
-def pread_into(fd: int, offset: int, view) -> int:
-    """Read ``len(view)`` bytes at ``offset`` into ``view`` (short-read loop)."""
+def pread_into(fd, offset: int, view) -> int:
+    """Read ``len(view)`` bytes at ``offset`` into ``view`` (short-read loop).
+
+    ``fd`` is either an ``int`` file descriptor or any object exposing
+    ``pread_into(offset, view)`` — e.g. ``repro.remote.RemoteReader`` — so
+    every slab/span/gather plan in this module works unchanged over
+    non-local sources."""
     mv = _writable_byte_view(view)
+    if not isinstance(fd, int):
+        return fd.pread_into(offset, mv)
     want = mv.nbytes
     got = 0
     while got < want:
@@ -235,16 +235,16 @@ def parallel_read_into(
 
 
 class _SpanJob(NamedTuple):
-    fd: int
+    fd: object  # int fd or positioned-read object (see pread_into)
     offset: int
     view: memoryview
 
 
-def parallel_read_spans(jobs: Sequence[Tuple[int, int, object]]) -> int:
+def parallel_read_spans(jobs: Sequence[Tuple[object, int, object]]) -> int:
     """One pool wave over many (fd, offset, view) reads — possibly spanning
-    multiple files. Each large view is further slab-split; everything is
-    submitted together so cross-file and intra-file parallelism share the
-    same wave (no nested waiting)."""
+    multiple files (or remote readers; see ``pread_into``). Each large view
+    is further slab-split; everything is submitted together so cross-file
+    and intra-file parallelism share the same wave (no nested waiting)."""
     flat: List[_SpanJob] = []
     total = 0
     for fd, off, view in jobs:

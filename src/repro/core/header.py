@@ -12,6 +12,7 @@ from .spec import (
     FIXED_HEADER,
     FIXED_HEADER_BYTES,
     FLAG_BIG_ENDIAN,
+    FLAG_ZLIB,
     KNOWN_FLAGS,
     MAGIC,
     MAX_NDIMS,
@@ -51,6 +52,13 @@ class Header:
             n *= d
         return n
 
+    @property
+    def logical_nbytes(self) -> int:
+        """Uncompressed payload size implied by shape × elbyte (equals
+        ``data_length`` except for zlib payloads, where ``data_length`` is
+        the stored size)."""
+        return self.count * self.elbyte
+
     def dtype(self) -> np.dtype:
         return dtype_of(self.eltype, self.elbyte, big_endian=self.big_endian)
 
@@ -59,11 +67,9 @@ class Header:
             raise RawArrayError(f"ndims={self.ndims} exceeds sanity bound {MAX_NDIMS}")
         if strict_flags and (self.flags & ~KNOWN_FLAGS):
             raise RawArrayError(f"unknown flag bits set: {self.flags:#x}")
-        expected = self.count * self.elbyte
+        expected = self.logical_nbytes
         # The paper keeps data_length as a redundant sanity check; honor it —
         # except for compressed payloads where data_length is the stored size.
-        from .spec import FLAG_ZLIB
-
         if not (self.flags & FLAG_ZLIB) and expected != self.data_length:
             raise RawArrayError(
                 f"data_length={self.data_length} inconsistent with "

@@ -12,6 +12,11 @@ Large payloads (>= ``RA_IO_PARALLEL_MIN``) are read and written through the
 slab-parallel engine (``repro.core.engine``, DESIGN.md §8); ``read_into``
 streams a file into a caller-owned preallocated array with zero intermediate
 copies.
+
+Every read-side entry point also accepts ``http(s)://`` URLs and dispatches
+to the remote data plane (``repro.remote``, DESIGN.md §9): the same header
+decode and engine-planned slab reads, issued as parallel byte-range
+requests. Write-side and mmap entry points are local-only and refuse URLs.
 """
 
 from __future__ import annotations
@@ -31,6 +36,35 @@ PathLike = Union[str, os.PathLike]
 # Buffered single-syscall-ish writes: header+data concatenated when small,
 # else two writes. Keeps the hot path syscall count minimal (paper's "Fast").
 _SMALL = 1 << 20
+
+
+def is_url(path: object) -> bool:
+    """True for ``http(s)://`` paths served by the remote data plane."""
+    return isinstance(path, str) and path.startswith(("http://", "https://"))
+
+
+def join_path(base: str, name: str) -> str:
+    """``os.path.join`` that also speaks URLs — the one helper every
+    directory-shaped layout (sharded stores, datasets, checkpoints) uses to
+    address its member files in both local and remote mode."""
+    if is_url(base):
+        from urllib.parse import quote
+
+        return base.rstrip("/") + "/" + quote(name)
+    return os.path.join(base, name)
+
+
+def _remote():
+    # deferred: repro.remote imports this module; function-local import
+    # breaks the cycle and keeps purely-local workloads free of it
+    from .. import remote
+
+    return remote
+
+
+def _reject_url(path: PathLike, op: str) -> None:
+    if is_url(path):
+        raise RawArrayError(f"{op} is local-only; cannot {op} a remote URL: {path}")
 
 
 def _as_bytes_view(arr: np.ndarray) -> memoryview:
@@ -54,6 +88,7 @@ def write(
     compress: bool = False,
 ) -> int:
     """Write ``arr`` as a RawArray file. Returns bytes written."""
+    _reject_url(path, "write")
     orig_shape = np.asarray(arr).shape
     arr = np.ascontiguousarray(arr)  # NB: promotes 0-d to (1,)...
     arr = arr.reshape(orig_shape)    # ...so restore the true rank (ndims=0 is legal)
@@ -106,6 +141,10 @@ def read(
     from one small syscall and ``readinto``s the payload DIRECTLY into the
     output array (zero intermediate copy — what the C reference does with
     fread into malloc'd memory)."""
+    if is_url(path):
+        return _remote().remote_read(
+            path, with_metadata=with_metadata, strict_flags=strict_flags
+        )
     with open(path, "rb", buffering=0) as f:
         head = f.read(4096)
         hdr = decode_header(head, strict_flags=strict_flags)
@@ -147,6 +186,11 @@ def read(
             raise RawArrayError("CRC32 mismatch: data segment corrupted")
     if hdr.flags & FLAG_ZLIB:
         payload = zlib.decompress(payload)
+        if len(payload) != hdr.logical_nbytes:
+            raise RawArrayError(
+                f"decompressed payload is {len(payload)} bytes, header shape "
+                f"{hdr.shape} x elbyte={hdr.elbyte} wants {hdr.logical_nbytes}"
+            )
     dtype = hdr.dtype()
     arr = np.frombuffer(payload, dtype=dtype)
     if hdr.big_endian:
@@ -169,6 +213,8 @@ def read_into(path: PathLike, out: np.ndarray) -> np.ndarray:
     Compressed / big-endian / CRC-trailed payloads fall back to ``read`` +
     one copy (they cannot be streamed in place).
     """
+    if is_url(path):
+        return _remote().remote_read_into(path, out)
     with open(path, "rb", buffering=0) as f:
         head = f.read(4096)
         hdr = decode_header(head)
@@ -191,7 +237,10 @@ def read_into(path: PathLike, out: np.ndarray) -> np.ndarray:
 
 
 def read_metadata(path: PathLike) -> bytes:
-    """Read only the trailing user metadata (cheap: header + seek)."""
+    """Read only the trailing user metadata (cheap: header + seek; for URLs
+    a header fetch + one tail range request)."""
+    if is_url(path):
+        return _remote().remote_read_metadata(path)
     with open(path, "rb") as f:
         hdr = read_header(f)
         f.seek(hdr.nbytes + hdr.data_length)
@@ -202,6 +251,8 @@ def read_metadata(path: PathLike) -> bytes:
 
 
 def header_of(path: PathLike) -> Header:
+    if is_url(path):
+        return _remote().remote_header_of(path)
     with open(path, "rb") as f:
         return read_header(f)
 
@@ -211,6 +262,7 @@ def memmap(path: PathLike, mode: str = "r") -> np.ndarray:
 
     Raises for compressed or big-endian payloads (not mappable in-place).
     """
+    _reject_url(path, "memmap")
     with open(path, "rb") as f:
         hdr = read_header(f)
     if hdr.flags & FLAG_ZLIB:
@@ -230,6 +282,7 @@ def memmap_slice(path: PathLike, start: int, stop: int, mode: str = "r") -> np.n
     range of a row slab is pure offset arithmetic; each host touches only
     its pages.
     """
+    _reject_url(path, "memmap")
     with open(path, "rb") as f:
         hdr = read_header(f)
     if hdr.flags & FLAG_ZLIB:
@@ -254,6 +307,7 @@ def memmap_slice(path: PathLike, start: int, stop: int, mode: str = "r") -> np.n
 
 def append_metadata(path: PathLike, metadata: bytes) -> None:
     """Append user metadata to an existing file (paper: 'can be anything')."""
+    _reject_url(path, "append_metadata")
     hdr = header_of(path)
     if hdr.flags & FLAG_CRC32_TRAILER:
         raise RawArrayError("append to CRC-trailed file would corrupt the trailer")

@@ -6,18 +6,25 @@ in-tree equivalent plus a self-test that our files *are* od-compatible::
     $ PYTHONPATH=src python -m repro.core.racat header test.ra
     $ PYTHONPATH=src python -m repro.core.racat data test.ra | head
     $ PYTHONPATH=src python -m repro.core.racat od test.ra   # prints the od commands
+    $ PYTHONPATH=src python -m repro.core.racat verify test.ra  # integrity check
+
+``header``, ``meta``, ``data``, and ``verify`` also accept ``http(s)://``
+URLs — introspection against a live byte-range server (DESIGN.md §9) via
+the remote client, e.g. ``racat header http://host:8742/train/x.ra``.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+import zlib
+from typing import List
 
 import numpy as np
 
-from .header import Header
-from .io import header_of, read, read_metadata
-from .spec import ELTYPE_NAMES
+from .header import Header, decode_header
+from .io import header_of, is_url, read, read_metadata
+from .spec import ELTYPE_NAMES, FLAG_CRC32_TRAILER, FLAG_ZLIB, RawArrayError
 
 
 def format_header(hdr: Header) -> str:
@@ -48,12 +55,82 @@ def od_commands(path: str, hdr: Header) -> str:
     )
 
 
+def _blob(path: str) -> bytes:
+    """Whole file as bytes — local read or one remote GET."""
+    if is_url(path):
+        from .. import remote
+
+        return remote.fetch_bytes(path)
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def verify_file(path: str) -> List[str]:
+    """Recompute every redundant integrity signal in one file; returns the
+    list of problems (empty = file is internally consistent).
+
+    Checks: header parse + magic, dims/data_length consistency, payload
+    present in full, CRC32 trailer recomputation, and — for zlib payloads —
+    that the *decompressed* size matches ``shape × elbyte``."""
+    problems: List[str] = []
+    try:
+        blob = _blob(path)
+    except (OSError, RawArrayError) as e:
+        return [f"unreadable: {e}"]
+    try:
+        hdr = decode_header(blob, strict_flags=False)
+    except RawArrayError as e:
+        return [f"bad header: {e}"]
+    if not (hdr.flags & FLAG_ZLIB) and hdr.data_length != hdr.logical_nbytes:
+        problems.append(
+            f"data_length={hdr.data_length} inconsistent with "
+            f"shape={list(hdr.shape)} x elbyte={hdr.elbyte} (= {hdr.logical_nbytes})"
+        )
+    payload = blob[hdr.nbytes : hdr.nbytes + hdr.data_length]
+    if len(payload) != hdr.data_length:
+        problems.append(
+            f"truncated data segment: header wants {hdr.data_length} bytes, "
+            f"file holds {len(payload)}"
+        )
+        return problems  # downstream checks would only cascade
+    trailer = blob[hdr.nbytes + hdr.data_length :]
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        if len(trailer) < 4:
+            problems.append("CRC32 flag set but trailer missing")
+        else:
+            want = int.from_bytes(trailer[-4:], "little")
+            got = zlib.crc32(payload)
+            if got != want:
+                problems.append(f"CRC32 mismatch: stored {want:#010x}, computed {got:#010x}")
+    if hdr.flags & FLAG_ZLIB:
+        try:
+            raw = zlib.decompress(payload)
+        except zlib.error as e:
+            problems.append(f"zlib payload does not decompress: {e}")
+        else:
+            if len(raw) != hdr.logical_nbytes:
+                problems.append(
+                    f"decompressed payload is {len(raw)} bytes, shape x elbyte "
+                    f"wants {hdr.logical_nbytes}"
+                )
+    return problems
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(prog="racat", description=__doc__)
-    p.add_argument("cmd", choices=["header", "data", "meta", "od"])
-    p.add_argument("path")
+    p.add_argument("cmd", choices=["header", "data", "meta", "od", "verify"])
+    p.add_argument("path", help="file path or http(s):// URL")
     p.add_argument("--limit", type=int, default=16, help="max elements to print")
     args = p.parse_args(argv)
+
+    if args.cmd == "verify":
+        problems = verify_file(args.path)
+        if problems:
+            for msg in problems:
+                print(f"FAIL {args.path}: {msg}", file=sys.stderr)
+            return 1
+        print(f"OK {args.path}")
+        return 0
 
     hdr = header_of(args.path)
     if args.cmd == "header":

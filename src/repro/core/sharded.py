@@ -16,6 +16,11 @@ be written in parallel by different hosts and read back under a *different*
 slicing (elastic restore): ``read_slice`` touches only the shards that
 overlap the requested row range, fanning the overlapping shards out over
 the parallel I/O engine straight into one output buffer (DESIGN.md §8).
+
+``dirpath`` may also be an ``http(s)://`` URL of a served shard directory
+(DESIGN.md §9): the index is fetched over HTTP and every shard read becomes
+engine-planned parallel byte-range requests through ``repro.remote`` —
+the same wave structure, remote sources.
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ import numpy as np
 
 from . import engine
 from . import io as raio
+from .io import is_url, join_path as _join
 from .spec import RawArrayError
 
 INDEX_NAME = "index.json"
@@ -83,6 +89,8 @@ def write_sharded(
     workers: int = 4,
 ) -> ShardIndex:
     """Split ``arr`` along ``axis`` into ``nshards`` RawArray files."""
+    if is_url(dirpath):
+        raise RawArrayError(f"write_sharded is local-only; got URL {dirpath}")
     if axis != 0:
         arr = np.moveaxis(arr, axis, 0)
     n = arr.shape[0]
@@ -118,6 +126,12 @@ def write_sharded(
 
 
 def load_index(dirpath: str) -> ShardIndex:
+    if is_url(dirpath):
+        from .. import remote
+
+        return ShardIndex.from_json(
+            remote.fetch_bytes(_join(dirpath, INDEX_NAME)).decode()
+        )
     with open(os.path.join(dirpath, INDEX_NAME)) as f:
         return ShardIndex.from_json(f.read())
 
@@ -179,26 +193,41 @@ def read_slice(
         row_nbytes *= d
     mv = memoryview(stored.reshape(-1).view(np.uint8)).cast("B") if row_nbytes else None
     offs = idx.offsets
+    overlaps = []  # (shard index, path, lo, a, b)
+    for i, fname in enumerate(idx.files):
+        lo, hi = offs[i], offs[i + 1]
+        if hi <= start or lo >= stop:
+            continue
+        a, b = max(start, lo) - lo, min(stop, hi) - lo
+        overlaps.append((i, _join(dirpath, fname), lo, a, b))
+    # resolve shard headers concurrently: remotely each one is an HTTP round
+    # trip, and doing them serially would dominate wide slices' latency
+    hdrs: dict = {}
+
+    def _resolve(i: int, path: str) -> None:
+        hdrs[i] = raio.header_of(path)
+
+    engine.run_tasks([(lambda i=i, p=p: _resolve(i, p)) for i, p, _, _, _ in overlaps])
     fds: List[int] = []
     jobs = []
     try:
-        for i, fname in enumerate(idx.files):
-            lo, hi = offs[i], offs[i + 1]
-            if hi <= start or lo >= stop:
-                continue
-            path = os.path.join(dirpath, fname)
-            hdr = raio.header_of(path)
-            if hdr.shape[1:] != rest or hdr.shape[0] != hi - lo:
+        for i, path, lo, a, b in overlaps:
+            hdr = hdrs[i]
+            if hdr.shape[1:] != rest or hdr.shape[0] != offs[i + 1] - lo:
                 raise RawArrayError(
-                    f"{fname}: shard shape {hdr.shape} inconsistent with index"
+                    f"{idx.files[i]}: shard shape {hdr.shape} inconsistent with index"
                 )
-            a, b = max(start, lo) - lo, min(stop, hi) - lo
             if row_nbytes == 0 or b == a:
                 continue
-            fd = os.open(path, os.O_RDONLY)
-            fds.append(fd)
+            if is_url(path):
+                from .. import remote
+
+                src = remote.get_reader(path)  # registry-pooled; not closed here
+            else:
+                src = os.open(path, os.O_RDONLY)
+                fds.append(src)
             dst = mv[(lo + a - start) * row_nbytes : (lo + b - start) * row_nbytes]
-            jobs.append((fd, hdr.nbytes + a * row_nbytes, dst))
+            jobs.append((src, hdr.nbytes + a * row_nbytes, dst))
         engine.parallel_read_spans(jobs)
     finally:
         for fd in fds:
@@ -220,8 +249,9 @@ def read_slice_naive(
     dirpath: str, start: int, stop: int, index: Optional[ShardIndex] = None
 ) -> np.ndarray:
     """Reference single-stream implementation (mmap each overlapping shard,
-    then concatenate). Kept for equivalence tests and as the sequential
-    baseline in ``benchmarks/bench_formats.py``."""
+    then concatenate; whole-shard reads + slicing when remote). Kept for
+    equivalence tests and as the sequential baseline in
+    ``benchmarks/bench_formats.py``."""
     idx = index or load_index(dirpath)
     start, stop = max(0, start), min(stop, idx.offsets[-1])
     if stop <= start:
@@ -233,7 +263,11 @@ def read_slice_naive(
         if hi <= start or lo >= stop:
             continue
         a, b = max(start, lo) - lo, min(stop, hi) - lo
-        pieces.append(np.asarray(raio.memmap_slice(os.path.join(dirpath, fname), a, b)))
+        path = _join(dirpath, fname)
+        if is_url(path):
+            pieces.append(np.asarray(raio.read(path))[a:b])
+        else:
+            pieces.append(np.asarray(raio.memmap_slice(path, a, b)))
     out = pieces[0] if len(pieces) == 1 else np.concatenate(pieces, axis=0)
     if idx.axis != 0:
         out = np.moveaxis(out, 0, idx.axis)

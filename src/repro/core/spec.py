@@ -18,7 +18,16 @@ header is introspectable with ``od -t u8`` (see ``repro.core.racat``).
 
 from __future__ import annotations
 
+import os
 import struct
+
+
+def env_int(name: str, default: int) -> int:
+    """Integer env knob, read at call time; malformed/unset falls back."""
+    try:
+        return int(os.environ.get(name, ""))
+    except ValueError:
+        return default
 
 # ASCII of "rawarray" read as a little-endian u64. The byte sequence on disk
 # is literally the string b"rawarray".

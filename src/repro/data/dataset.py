@@ -15,6 +15,14 @@ directory structure")::
 Every shard file is an independent, memory-mappable RawArray; a reader
 needs only offset arithmetic to fetch any row range of any field — this is
 what makes multi-host sharded reads and exact-resume trivial.
+
+``root`` may also be an ``http(s)://`` URL of a served dataset directory
+(DESIGN.md §9): the manifest is fetched over HTTP, every positioned read
+becomes a pooled byte-range request through ``repro.remote``, and the
+block cache turns repeated epoch traversals into RAM hits. The engine's
+``rows``/``gather`` wave plans are identical in both modes; only the
+sparse-leftover path differs (ranged reads instead of mmap fancy
+indexing, since there is nothing to map).
 """
 
 from __future__ import annotations
@@ -31,8 +39,14 @@ from ..core import engine
 
 MANIFEST = "manifest.json"
 
+_join = ra.join_path
+
 
 def dataset_manifest(root: str) -> Dict[str, Any]:
+    if ra.is_url(root):
+        from .. import remote
+
+        return json.loads(remote.fetch_bytes(_join(root, MANIFEST)))
     with open(os.path.join(root, MANIFEST)) as f:
         return json.load(f)
 
@@ -114,6 +128,7 @@ class RaDataset:
 
     def __init__(self, root: str):
         self.root = root
+        self.is_remote = ra.is_url(root)
         man = dataset_manifest(root)
         if man.get("format") != "rawarray-dataset-v1":
             raise ra.RawArrayError(f"not a RawArray dataset: {root}")
@@ -127,14 +142,17 @@ class RaDataset:
         self.total_rows = off
         self._bounds = np.array([s.row_offset for s in self.shards] + [off])
         self._mmaps: Dict[Tuple[int, str], np.ndarray] = {}
-        # (shard, field) -> (fd, data_offset, row_nbytes) for positioned reads
-        self._fds: Dict[Tuple[int, str], Tuple[int, int, int]] = {}
+        # (shard, field) -> (src, data_offset, row_nbytes) for positioned
+        # reads; src is an int fd locally, a pooled RemoteReader for URLs
+        self._fds: Dict[Tuple[int, str], Tuple[Any, int, int]] = {}
 
     def __len__(self) -> int:
         return self.total_rows
 
     def close(self) -> None:
         for fd, _, _ in self._fds.values():
+            if not isinstance(fd, int):
+                continue  # remote readers live in the shared registry
             try:
                 os.close(fd)
             except OSError:
@@ -149,23 +167,72 @@ class RaDataset:
             pass
 
     def _mmap(self, shard_idx: int, field: str) -> np.ndarray:
+        if self.is_remote:
+            raise ra.RawArrayError(
+                "memory-mapping is unavailable for a remote dataset "
+                "(gather serves every row via ranged reads instead)"
+            )
         key = (shard_idx, field)
         if key not in self._mmaps:
             path = os.path.join(self.root, self.shards[shard_idx].files[field])
             self._mmaps[key] = ra.memmap(path)
         return self._mmaps[key]
 
-    def _fmeta(self, shard_idx: int, field: str) -> Tuple[int, int, int]:
-        """(fd, payload offset, row bytes) for one shard file, cached."""
+    def _fmeta(self, shard_idx: int, field: str) -> Tuple[Any, int, int]:
+        """(src, payload offset, row bytes) for one shard file, cached.
+        ``src`` is whatever ``engine.pread_into`` accepts: an int fd for a
+        local file, a pooled ``RemoteReader`` for a URL."""
         key = (shard_idx, field)
         if key not in self._fds:
-            path = os.path.join(self.root, self.shards[shard_idx].files[field])
+            path = _join(self.root, self.shards[shard_idx].files[field])
             hdr = ra.header_of(path)
             row_nbytes = hdr.elbyte
             for d in hdr.shape[1:]:
                 row_nbytes *= d
-            self._fds[key] = (os.open(path, os.O_RDONLY), hdr.nbytes, row_nbytes)
+            if self.is_remote:
+                from .. import remote
+
+                src: Any = remote.get_reader(path)
+            else:
+                src = os.open(path, os.O_RDONLY)
+            self._fds[key] = (src, hdr.nbytes, row_nbytes)
         return self._fds[key]
+
+    def _resolve_fmeta(self, shard_idx_list, fields) -> None:
+        """Resolve the (shard, field) sources a read will touch in one
+        concurrent wave. Remotely each resolution costs 1-2 HTTP round
+        trips (header + HEAD); a serial first-batch loop over S x F shard
+        files would pay them back-to-back (same pre-resolve pattern as
+        checkpoint restore and sharded.read_slice)."""
+        pending = [
+            (si, f)
+            for si in shard_idx_list
+            for f in fields
+            if (si, f) not in self._fds
+        ]
+        if len(pending) > 1:
+            engine.run_tasks([(lambda s=si, g=f: self._fmeta(s, g)) for si, f in pending])
+
+    def io_stats(self) -> Dict[str, int]:
+        """Block-cache counters over this dataset's remote readers (empty
+        for a local dataset) — the observable that says whether an epoch
+        hit RAM or the wire. NB: readers default to the process-wide
+        ``remote.shared_cache()``, so with other remote traffic in the same
+        process (another dataset, a checkpoint restore) these counters are
+        process-global, not per-dataset; pass each reader its own
+        ``BlockCache`` for isolated accounting."""
+        if not self.is_remote:
+            return {}
+        caches = []
+        for src, _, _ in self._fds.values():
+            cache = getattr(src, "cache", None)
+            if cache is not None and all(c is not cache for c in caches):
+                caches.append(cache)
+        out: Dict[str, int] = {}
+        for c in caches:
+            for k, v in c.stats().items():
+                out[k] = out.get(k, 0) + v
+        return out
 
     def _field_spec(self, field: str) -> Tuple[Tuple[int, ...], np.dtype]:
         info = self.fields[field]
@@ -205,11 +272,16 @@ class RaDataset:
         result = {f: self._dest(out, f, n) for f in fields}
         if n == 0:
             return result
+        touched = [
+            i
+            for i, sh in enumerate(self.shards)
+            if sh.row_offset < stop and sh.row_offset + sh.rows > start
+        ]
+        self._resolve_fmeta(touched, fields)
         jobs = []
-        for i, sh in enumerate(self.shards):
+        for i in touched:
+            sh = self.shards[i]
             lo, hi = sh.row_offset, sh.row_offset + sh.rows
-            if hi <= start or lo >= stop:
-                continue
             a, b = max(start, lo) - lo, min(stop, hi) - lo
             for f in fields:
                 fd, doff, rnb = self._fmeta(i, f)
@@ -257,8 +329,14 @@ class RaDataset:
             if a == b:
                 continue
             local = sidx[a:b] - self.shards[si].row_offset
-            runs, leftover = engine.coalesce_sorted(local, np.arange(a, b))
+            # remote: no mmap to service sparse leftovers, so every request
+            # becomes a ranged read (min_run=1); singleton runs are absorbed
+            # by the reader's block cache
+            min_run = 1 if self.is_remote else None
+            runs, leftover = engine.coalesce_sorted(local, np.arange(a, b),
+                                                    min_run=min_run)
             plans.append((si, runs, leftover))
+        self._resolve_fmeta([si for si, _, _ in plans], fields)
         tasks = []
         fancy = []  # deferred sparse leftovers: (si, field, positions, local)
         for f in fields:
@@ -316,7 +394,8 @@ class RaDataset:
         self, indices: np.ndarray, fields: Optional[Sequence[str]] = None
     ) -> Dict[str, np.ndarray]:
         """Reference per-row fancy-indexing gather (the pre-engine path).
-        Kept for equivalence tests and as the benchmark baseline."""
+        Kept for equivalence tests and as the benchmark baseline.
+        Local-only: it indexes shard mmaps."""
         fields = list(fields or self.fields)
         indices = np.asarray(indices)
         bounds = np.array([s.row_offset for s in self.shards] + [self.total_rows])

@@ -16,6 +16,11 @@
   off to preserve the seed's value semantics.
 * **Straggler visibility**: the loader tracks wait-time (device starved) vs
   ready-time; exported in ``stats()`` for the train-loop straggler monitor.
+* **Remote datasets** (DESIGN.md §9): a loader over an ``http(s)://``
+  ``RaDataset`` streams batches via parallel byte-range reads; with the
+  block cache sized to the working set, epoch 2+ is served from RAM.
+  ``stats()`` then also reports the cache hit/miss/eviction counters.
+  The ``naive=True`` baseline indexes local mmaps and is refused remotely.
 """
 
 from __future__ import annotations
@@ -61,6 +66,11 @@ class DataLoader:
     ):
         if not drop_last:
             raise NotImplementedError("fixed-shape training wants drop_last")
+        if naive and getattr(dataset, "is_remote", False):
+            raise ValueError(
+                "naive=True gathers via local mmaps and cannot stream a "
+                "remote dataset; use the default engine path"
+            )
         self.ds = dataset
         self.batch_size = batch_size
         self.seed = seed
@@ -68,6 +78,9 @@ class DataLoader:
         self.host_id = host_id
         self.host_count = host_count
         self.prefetch = prefetch
+        # queue capacity must be finite or the producer laps the buffer ring
+        # (prefetch=0 would mean queue.Queue(maxsize=0) = unbounded)
+        self._qcap = max(1, prefetch)
         self.reuse_buffers = reuse_buffers and not naive
         self.naive = naive  # seed-era produce path (benchmark baseline)
         self._ring: list = []  # preallocated batch dicts when reuse_buffers
@@ -106,12 +119,12 @@ class DataLoader:
 
     # ---- synchronous iteration ---------------------------------------------
     def _next_buffer(self) -> Optional[Dict[str, np.ndarray]]:
-        """Round-robin over prefetch+2 preallocated batch dicts: one held by
-        the consumer, up to ``prefetch`` queued, one being filled."""
+        """Round-robin over qcap+2 preallocated batch dicts: one held by
+        the consumer, up to ``qcap`` queued, one being filled."""
         if not self.reuse_buffers:
             return None
         if not self._ring:
-            nbufs = self.prefetch + 2
+            nbufs = self._qcap + 2
             for _ in range(nbufs):
                 self._ring.append(
                     {
@@ -153,7 +166,7 @@ class DataLoader:
 
     # ---- prefetch thread ---------------------------------------------------
     def _start_prefetch(self) -> None:
-        self._q = queue.Queue(maxsize=self.prefetch)
+        self._q = queue.Queue(maxsize=self._qcap)
         self._stop.clear()
 
         def run():
@@ -203,8 +216,13 @@ class DataLoader:
         self._thread = None
 
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "loader_wait_s": self._wait_s,
             "loader_produce_s": self._produce_s,
             "batches": float(self._n_batches),
         }
+        io_stats = getattr(self.ds, "io_stats", None)
+        if io_stats is not None:
+            for k, v in io_stats().items():
+                out[f"remote_cache_{k}"] = float(v)
+        return out

@@ -1,0 +1,47 @@
+"""Remote RawArray data plane (DESIGN.md §9).
+
+Three layers:
+
+* ``server``  — stdlib threaded HTTP byte-range server (``os.sendfile``
+  zero-copy, ETag/304, ``/header/<path>`` JSON fast path);
+* ``client``  — ``RemoteReader``: the engine's positioned-read interface
+  over pooled HTTP connections, so slab/gather waves run unchanged over
+  the network; plus ``remote_read`` / ``remote_read_into`` /
+  ``remote_header_of`` mirroring ``core.io``;
+* ``cache``   — block-aligned LRU byte cache between client and sockets.
+
+``core.io`` dispatches ``http(s)://`` paths here, which makes the whole
+data plane URL-aware: sharded stores, datasets, the loader, and checkpoint
+restore all accept URLs.
+"""
+
+from .cache import BlockCache, reset_shared_cache, shared_cache
+from .client import (
+    RemoteReader,
+    close_readers,
+    fetch_bytes,
+    get_reader,
+    is_url,
+    remote_header_of,
+    remote_read,
+    remote_read_into,
+    remote_read_metadata,
+)
+from .server import ArrayServer, serve
+
+__all__ = [
+    "ArrayServer",
+    "BlockCache",
+    "RemoteReader",
+    "close_readers",
+    "fetch_bytes",
+    "get_reader",
+    "is_url",
+    "remote_header_of",
+    "remote_read",
+    "remote_read_into",
+    "remote_read_metadata",
+    "reset_shared_cache",
+    "serve",
+    "shared_cache",
+]

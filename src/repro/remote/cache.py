@@ -1,0 +1,138 @@
+"""Block-aligned LRU byte cache for the remote data plane (DESIGN.md §9).
+
+Sits between ``RemoteReader`` and the sockets: every fetched byte lands in
+fixed-size blocks keyed by ``(tag, block_index)`` where ``tag`` identifies
+one remote object *version* (URL + ETag), so repeated epoch traversals of a
+remote dataset are served from RAM instead of the wire, and a file that
+changes on the server can never satisfy hits from its stale bytes.
+
+Knobs (read at construction):
+
+==========================  ====================================  =========
+variable                    meaning                               default
+==========================  ====================================  =========
+``RA_REMOTE_BLOCK``         cache block size in bytes             256 KiB
+``RA_REMOTE_CACHE_MB``      total cache capacity in MiB           256
+==========================  ====================================  =========
+
+256 KiB blocks keep read amplification low for scattered row gathers
+(a sparse row costs one block, not megabytes) while bulk reads coalesce
+runs of missing blocks into single large ranged requests anyway.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+from ..core.spec import env_int as _env_int
+
+
+def default_block_bytes() -> int:
+    return max(1 << 12, _env_int("RA_REMOTE_BLOCK", 1 << 18))
+
+
+def default_capacity_bytes() -> int:
+    return max(0, _env_int("RA_REMOTE_CACHE_MB", 256)) << 20
+
+
+class BlockCache:
+    """Thread-safe LRU over fixed-size byte blocks with hit/miss/eviction
+    counters. A zero capacity disables caching (every ``get`` is a miss and
+    ``put`` is a no-op), which keeps call sites branch-free."""
+
+    def __init__(
+        self,
+        block_bytes: Optional[int] = None,
+        capacity_bytes: Optional[int] = None,
+    ):
+        self.block_bytes = int(block_bytes or default_block_bytes())
+        self.capacity_bytes = (
+            default_capacity_bytes() if capacity_bytes is None else int(capacity_bytes)
+        )
+        self._lock = threading.Lock()
+        self._blocks: "OrderedDict[Tuple[str, int], bytes]" = OrderedDict()
+        self._nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def get(self, tag: str, block_index: int) -> Optional[bytes]:
+        """Return the cached block (bumping it to most-recently-used), or
+        ``None`` on a miss."""
+        key = (tag, block_index)
+        with self._lock:
+            data = self._blocks.get(key)
+            if data is None:
+                self.misses += 1
+                return None
+            self._blocks.move_to_end(key)
+            self.hits += 1
+            return data
+
+    def put(self, tag: str, block_index: int, data: bytes) -> None:
+        if self.capacity_bytes <= 0 or len(data) > self.capacity_bytes:
+            return
+        key = (tag, block_index)
+        with self._lock:
+            old = self._blocks.pop(key, None)
+            if old is not None:
+                self._nbytes -= len(old)
+            self._blocks[key] = data
+            self._nbytes += len(data)
+            while self._nbytes > self.capacity_bytes:
+                _, victim = self._blocks.popitem(last=False)
+                self._nbytes -= len(victim)
+                self.evictions += 1
+
+    def invalidate(self, tag: str) -> int:
+        """Drop every block of one object version; returns blocks dropped."""
+        with self._lock:
+            keys = [k for k in self._blocks if k[0] == tag]
+            for k in keys:
+                self._nbytes -= len(self._blocks.pop(k))
+            return len(keys)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._blocks.clear()
+            self._nbytes = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "blocks": len(self._blocks),
+                "nbytes": self._nbytes,
+            }
+
+
+_shared: Optional[BlockCache] = None
+_shared_lock = threading.Lock()
+
+
+def shared_cache() -> BlockCache:
+    """Process-wide cache shared by every ``RemoteReader`` by default, so
+    readers over many shard files pool one capacity budget."""
+    global _shared
+    with _shared_lock:
+        if _shared is None:
+            _shared = BlockCache()
+        return _shared
+
+
+def reset_shared_cache() -> None:
+    """Drop the shared cache (tests/benchmarks: guarantee a cold start)."""
+    global _shared
+    with _shared_lock:
+        _shared = None

@@ -1,0 +1,284 @@
+"""Stdlib-only threaded HTTP byte-range server for RawArray trees
+(DESIGN.md §9).
+
+Serves a directory of ``.ra`` files — including sharded stores, dataset
+directories, and checkpoint directories (their ``index.json`` /
+``manifest.json`` are plain files) — with exactly the parts of HTTP a
+remote array plane needs:
+
+* ``GET /<path>`` with single-range ``Range: bytes=a-b`` support (``206`` +
+  ``Content-Range``); a row slab or engine slab is one request, because the
+  RawArray layout makes every sub-range pure offset arithmetic;
+* zero-copy responses: entity bytes go socket-ward through ``os.sendfile``
+  (graceful buffered fallback where unavailable);
+* ``ETag`` from ``(mtime_ns, size)`` and ``If-None-Match`` → ``304``, so
+  clients can pin a version and revalidate for free;
+* ``GET /header/<path>`` fast path: the decoded RawArray header as JSON —
+  one round trip, no range arithmetic on the client;
+* ``HEAD`` for size/ETag discovery.
+
+Run standalone::
+
+    PYTHONPATH=src python -m repro.remote.server <root> [--host H] [--port P]
+
+or in-process (tests, benchmarks)::
+
+    server = serve(root, port=0)      # ephemeral port, daemon thread
+    ...
+    server.shutdown()
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.server
+import json
+import os
+import threading
+from typing import Optional, Tuple
+from urllib.parse import unquote, urlsplit
+
+from ..core import io as raio
+from ..core.spec import RawArrayError
+
+_COPY_CHUNK = 1 << 20
+
+
+def file_etag(st: os.stat_result) -> str:
+    """Strong-enough validator from (mtime, size) — cheap, no content hash."""
+    return f'"{st.st_mtime_ns:x}-{st.st_size:x}"'
+
+
+class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"  # keep-alive: one conn serves many ranges
+    server_version = "RawArrayHTTP/1.0"
+
+    def log_message(self, fmt, *args):  # quiet by default; --verbose re-enables
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    # ---- helpers -----------------------------------------------------------
+    def _resolve(self, relpath: str) -> Optional[str]:
+        """Map a URL path onto the served root; ``None`` if it escapes or is
+        not a regular file."""
+        root = self.server.root  # type: ignore[attr-defined]
+        full = os.path.realpath(os.path.join(root, relpath.lstrip("/")))
+        if full != root and not full.startswith(root + os.sep):
+            return None
+        if not os.path.isfile(full):
+            return None
+        return full
+
+    def _fail(self, status: int, msg: str) -> None:
+        body = (msg + "\n").encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "text/plain")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except OSError:
+            pass
+
+    def _parse_range(self, size: int) -> Optional[Tuple[int, int]]:
+        """Parse a single-range ``Range`` header into ``(start, stop)``.
+
+        Returns ``None`` for "serve the whole entity"; raises ``ValueError``
+        for a syntactically valid but unsatisfiable range (→ 416)."""
+        spec = self.headers.get("Range")
+        if not spec or not spec.startswith("bytes="):
+            return None
+        spec = spec[len("bytes="):]
+        if "," in spec:  # multipart ranges are overkill for slab reads
+            return None
+        a, _, b = spec.partition("-")
+        if a == "":  # suffix range: last N bytes
+            n = int(b)
+            if n <= 0:
+                raise ValueError("empty suffix range")
+            return max(0, size - n), size
+        start = int(a)
+        stop = int(b) + 1 if b else size
+        if start >= size or stop <= start:
+            raise ValueError(f"range [{start}, {stop}) outside entity of {size}")
+        return start, min(stop, size)
+
+    def _send_entity(self, path: str, head_only: bool) -> None:
+        try:
+            st = os.stat(path)
+        except OSError:
+            self._fail(404, "not found")
+            return
+        etag = file_etag(st)
+        inm = self.headers.get("If-None-Match")
+        if inm and (inm.strip() == "*" or etag in [t.strip() for t in inm.split(",")]):
+            self.send_response(304)
+            self.send_header("ETag", etag)
+            self.send_header("Content-Length", "0")
+            self.end_headers()
+            return
+        size = st.st_size
+        try:
+            rng = self._parse_range(size)
+        except ValueError:
+            self.send_response(416)
+            self.send_header("Content-Range", f"bytes */{size}")
+            self.send_header("Content-Length", "0")
+            self.end_headers()
+            return
+        if rng is None:
+            start, stop = 0, size
+            self.send_response(200)
+        else:
+            start, stop = rng
+            self.send_response(206)
+            self.send_header("Content-Range", f"bytes {start}-{stop - 1}/{size}")
+        count = stop - start
+        self.send_header("Accept-Ranges", "bytes")
+        self.send_header("ETag", etag)
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("Content-Length", str(count))
+        self.end_headers()
+        if head_only or count == 0:
+            return
+        with open(path, "rb") as f:
+            self.wfile.flush()  # drain buffered headers before raw socket I/O
+            self._copy_range(f, start, count)
+
+    def _copy_range(self, f, offset: int, count: int) -> None:
+        """Entity bytes to the socket — ``os.sendfile`` zero-copy when the
+        platform allows, buffered pread/write otherwise. The fallback resumes
+        AFTER whatever sendfile already sent: re-sending from the range start
+        would silently corrupt the fixed-Content-Length entity."""
+        sock_fd = self.connection.fileno()
+        sent_total = 0
+        try:
+            while sent_total < count:
+                sent = os.sendfile(sock_fd, f.fileno(), offset + sent_total,
+                                   count - sent_total)
+                if sent == 0:
+                    return  # peer went away; nothing more to do
+                sent_total += sent
+            return
+        except (AttributeError, OSError):
+            pass  # not a disk file / platform without sendfile: fall back
+        f.seek(offset + sent_total)
+        left = count - sent_total
+        while left:
+            chunk = f.read(min(_COPY_CHUNK, left))
+            if not chunk:
+                break
+            try:
+                self.wfile.write(chunk)
+            except OSError:
+                return
+            left -= len(chunk)
+
+    def _send_header_json(self, relpath: str) -> None:
+        path = self._resolve(relpath)
+        if path is None:
+            self._fail(404, "not found")
+            return
+        try:
+            hdr = raio.header_of(path)
+        except RawArrayError as e:
+            self._fail(422, f"not a RawArray file: {e}")
+            return
+        st = os.stat(path)
+        body = json.dumps(
+            {
+                "flags": hdr.flags,
+                "eltype": hdr.eltype,
+                "elbyte": hdr.elbyte,
+                "data_length": hdr.data_length,
+                "ndims": hdr.ndims,
+                "shape": list(hdr.shape),
+                "header_bytes": hdr.nbytes,
+                "dtype": str(hdr.dtype()),
+                "file_size": st.st_size,
+            }
+        ).encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("ETag", file_etag(st))
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except OSError:
+            pass
+
+    # ---- verbs -------------------------------------------------------------
+    def _route(self, head_only: bool) -> None:
+        path = unquote(urlsplit(self.path).path)
+        # a real file under a literal header/ directory wins over the JSON
+        # endpoint, so the fast path can never shadow served bytes (the
+        # client falls back to a ranged header read when JSON parsing fails)
+        full = self._resolve(path)
+        if full is None and path.startswith("/header/") and not head_only:
+            self._send_header_json(path[len("/header"):])
+            return
+        if full is None:
+            self._fail(404, "not found")
+            return
+        self._send_entity(full, head_only)
+
+    def do_GET(self) -> None:
+        self._route(head_only=False)
+
+    def do_HEAD(self) -> None:
+        self._route(head_only=True)
+
+
+class ArrayServer(http.server.ThreadingHTTPServer):
+    """Threaded byte-range server rooted at one directory."""
+
+    daemon_threads = True
+
+    def __init__(self, root: str, address=("127.0.0.1", 0), *, verbose: bool = False):
+        self.root = os.path.realpath(root)
+        if not os.path.isdir(self.root):
+            raise RawArrayError(f"server root is not a directory: {root}")
+        self.verbose = verbose
+        super().__init__(address, RangeRequestHandler)
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+    @property
+    def url(self) -> str:
+        host = self.server_address[0]
+        return f"http://{host}:{self.port}"
+
+
+def serve(root: str, host: str = "127.0.0.1", port: int = 0, *, verbose: bool = False) -> ArrayServer:
+    """Start an ``ArrayServer`` on a daemon thread; returns the (already
+    listening) server — ``server.url`` is ready immediately, ``port=0``
+    picks an ephemeral port. Stop with ``server.shutdown()``."""
+    server = ArrayServer(root, (host, port), verbose=verbose)
+    t = threading.Thread(target=server.serve_forever, daemon=True, name="ra-remote-srv")
+    t.start()
+    return server
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="ra-serve", description=__doc__)
+    p.add_argument("root", help="directory of .ra files / shard dirs / checkpoints")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8742)
+    p.add_argument("--verbose", action="store_true", help="log each request")
+    args = p.parse_args(argv)
+    server = ArrayServer(args.root, (args.host, args.port), verbose=args.verbose)
+    print(f"serving {server.root} at {server.url} (Ctrl-C to stop)")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.server_close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

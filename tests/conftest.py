@@ -1,9 +1,15 @@
 """Test-suite bootstrap: make ``src`` importable without an installed
-package and register the hypothesis fallback (tests/_compat.py) when the
-real package is missing, so the suite collects and runs everywhere."""
+package, register the hypothesis fallback (tests/_compat.py) when the
+real package is missing, and enforce a per-test wall-clock timeout so a
+hung socket (remote-plane tests talk to real servers) can never wedge the
+whole suite."""
 
 import os
+import signal
 import sys
+import threading
+
+import pytest
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _SRC = os.path.join(os.path.dirname(_HERE), "src")
@@ -19,3 +25,40 @@ except ImportError:
 
     sys.modules.setdefault("hypothesis", _compat)
     sys.modules.setdefault("hypothesis.strategies", _compat.strategies)
+
+
+# --------------------------------------------------------- per-test timeout
+# Stdlib-only (no pytest-timeout in the image): SIGALRM interrupts the test
+# body — including a blocking socket read — and fails it with a traceback.
+# Knob: RA_TEST_TIMEOUT seconds; 0 disables. Only armed where SIGALRM works
+# (main thread, non-Windows).
+def _test_timeout_s() -> int:
+    try:
+        return int(os.environ.get("RA_TEST_TIMEOUT", "120"))
+    except ValueError:
+        return 120
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    timeout = _test_timeout_s()
+    armed = (
+        timeout > 0
+        and hasattr(signal, "SIGALRM")
+        and threading.current_thread() is threading.main_thread()
+    )
+    if armed:
+        def _alarm(signum, frame):
+            raise TimeoutError(
+                f"{item.nodeid} exceeded the {timeout}s per-test timeout "
+                f"(RA_TEST_TIMEOUT)"
+            )
+
+        prev = signal.signal(signal.SIGALRM, _alarm)
+        signal.alarm(timeout)
+    try:
+        yield
+    finally:
+        if armed:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, prev)

@@ -192,3 +192,56 @@ def test_struct_records_roundtrip(tmp_path):
     assert (hdr.eltype, hdr.elbyte) == (ra.ELTYPE_STRUCT, sd.itemsize)
     back = ra.read(p).view(sd).reshape(s.shape)
     assert np.array_equal(back, s)
+
+
+# -------------------------------------------- combined flag interactions
+def test_zlib_crc_metadata_combined_roundtrip(tmp_path):
+    """All beyond-paper extensions in ONE file: zlib payload + CRC32 trailer
+    + trailing user metadata must compose (DESIGN.md §7)."""
+    p = str(tmp_path / "all.ra")
+    arr = np.tile(np.arange(97, dtype=np.float64), 41).reshape(41, 97)
+    meta = b'{"origin": "combined-flags-test"}'
+    ra.write(p, arr, compress=True, crc32=True, metadata=meta)
+    hdr = ra.header_of(p)
+    assert hdr.flags & ra.FLAG_ZLIB and hdr.flags & ra.FLAG_CRC32_TRAILER
+    assert hdr.data_length < hdr.logical_nbytes  # actually compressed
+    back, got_meta = ra.read(p, with_metadata=True)
+    assert np.array_equal(back, arr)
+    assert got_meta == meta
+    assert ra.read_metadata(p) == meta
+    # CRC still catches corruption through the combined trailer layout
+    blob = bytearray(open(p, "rb").read())
+    blob[hdr.nbytes + 5] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ra.RawArrayError, match="CRC32"):
+        ra.read(p)
+
+
+def test_zlib_decompressed_size_verified(tmp_path):
+    """A compressed payload whose *decompressed* size disagrees with
+    shape x elbyte must be rejected (stored size alone is not enough)."""
+    import zlib as _zlib
+
+    from repro.core.header import Header
+
+    p = str(tmp_path / "lie.ra")
+    payload = _zlib.compress(np.arange(10, dtype=np.float32).tobytes())
+    # header claims 20 elements but the payload decompresses to 10
+    hdr = Header(flags=ra.FLAG_ZLIB, eltype=3, elbyte=4,
+                 data_length=len(payload), shape=(20,))
+    ra.write_like(p, hdr, payload)
+    with pytest.raises(ra.RawArrayError, match="[Dd]ecompressed"):
+        ra.read(p)
+
+
+def test_racat_verify_subcommand(tmp_path, capsys):
+    from repro.core.racat import main as racat_main
+
+    p = str(tmp_path / "v.ra")
+    ra.write(p, np.arange(256, dtype=np.float32), compress=True, crc32=True)
+    assert racat_main(["verify", p]) == 0
+    blob = bytearray(open(p, "rb").read())
+    blob[-3] ^= 0x01  # flip a CRC byte
+    open(p, "wb").write(bytes(blob))
+    assert racat_main(["verify", p]) == 1
+    assert "CRC32" in capsys.readouterr().err
