@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|remote|formats|images|pipeline|checkpoint|roofline")
+                   help="engine|remote|compress|formats|images|pipeline|checkpoint|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -36,6 +36,7 @@ def main(argv=None) -> None:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(repo, "src"))
     sys.path.insert(0, repo)  # so `benchmarks.*` imports work when run as a script
+    from benchmarks.bench_compress import bench_compress, write_bench_compress
     from benchmarks.bench_formats import bench_engine, bench_formats, derive_speedups, write_bench_io
     from benchmarks.bench_images import bench_images
     from benchmarks.bench_pipeline import bench_checkpoint, bench_pipeline
@@ -45,7 +46,8 @@ def main(argv=None) -> None:
     wanted = (
         args.only.split(",")
         if args.only
-        else ["engine", "remote", "formats", "images", "pipeline", "checkpoint", "roofline"]
+        else ["engine", "remote", "compress", "formats", "images", "pipeline",
+              "checkpoint", "roofline"]
     )
 
     if "engine" in wanted:
@@ -58,6 +60,11 @@ def main(argv=None) -> None:
         _print_rows(rows)
         all_rows += rows
         print(f"# wrote {write_bench_remote(rows)}")
+    if "compress" in wanted:
+        rows = bench_compress(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_compress(rows)}")
     if "formats" in wanted:
         rows = bench_formats(full=args.full)
         rows += derive_speedups(rows)

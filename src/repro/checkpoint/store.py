@@ -89,8 +89,17 @@ def save_checkpoint(
     *,
     extra: Optional[Dict[str, Any]] = None,
     crc32: bool = False,
+    chunked: bool = False,
+    codec: Optional[str] = None,
+    chunk_bytes: Optional[int] = None,
 ) -> str:
-    """Synchronous atomic save. Returns the final checkpoint path."""
+    """Synchronous atomic save. Returns the final checkpoint path.
+
+    ``chunked=True`` writes every leaf chunk-compressed (DESIGN.md §10):
+    leaves compress concurrently on the shared engine pool (within one leaf
+    the chunks compress serially — the leaf writes already occupy the pool;
+    a single-leaf save chunk-parallelizes instead), and restore folds every
+    leaf's chunk decodes into the one restore wave."""
     if ra.is_url(directory):
         raise ra.RawArrayError("checkpoint saves are local-only; restore takes URLs")
     final = os.path.join(directory, f"step_{step:08d}")
@@ -118,7 +127,12 @@ def save_checkpoint(
         arr = _leaf_to_numpy(leaf)
         fname = name + ".ra"
         fpath = os.path.join(tmp, fname)
-        write_tasks.append(lambda p=fpath, a=arr: ra.write(p, a, crc32=crc32))
+        write_tasks.append(
+            lambda p=fpath, a=arr: ra.write(
+                p, a, crc32=crc32,
+                chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
+            )
+        )
         manifest["leaves"][name] = {
             "file": fname,
             "shape": list(arr.shape),
@@ -137,33 +151,51 @@ def save_checkpoint(
 
 def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str]) -> Dict[str, np.ndarray]:
     """Stream many leaf files into preallocated arrays in ONE engine wave:
-    cross-file and intra-file slab parallelism share the pool (DESIGN.md §8)."""
+    cross-file and intra-file slab parallelism share the pool (DESIGN.md §8).
+    Chunked-compressed leaves (DESIGN.md §10) join the wave too — one
+    fetch+decompress task per chunk across all leaves."""
     arrays: Dict[str, np.ndarray] = {}
     jobs = []
+    chunk_tasks = []
     fds: List[int] = []
     fallback: List[Tuple[str, str]] = []
-    # resolve every leaf's (header, source) concurrently first: remotely each
-    # resolution costs 1-2 HTTP round trips, and a serial loop over hundreds
-    # of leaves would dominate cold-start latency before the wave begins
-    metas: Dict[str, Tuple[str, Any, Any]] = {}
+    # resolve every leaf's (header, source, chunk table) concurrently first:
+    # remotely each resolution costs 1-2 HTTP round trips, and a serial loop
+    # over hundreds of leaves would dominate cold-start latency
+    metas: Dict[str, Tuple[str, Any, Any, Any]] = {}
 
     def _resolve(name: str) -> None:
         fpath = _join(path, manifest["leaves"][name]["file"])
         hdr = ra.header_of(fpath)
         src = None
-        plain = not (hdr.flags & (ra.FLAG_ZLIB | ra.FLAG_CRC32_TRAILER)) and not hdr.big_endian
-        if plain and hdr.data_length and ra.is_url(fpath):
-            from .. import remote
+        table = None
+        chunked = bool(hdr.flags & ra.FLAG_CHUNKED) and not hdr.big_endian
+        if hdr.data_length and (hdr.plain or chunked):
+            if ra.is_url(fpath):
+                from .. import remote
 
-            src = remote.get_reader(fpath)
-        metas[name] = (fpath, hdr, src)
+                src = remote.get_reader(fpath)
+            elif chunked:
+                src = os.open(fpath, os.O_RDONLY)
+                fds.append(src)
+        if chunked and src is not None:
+            table = ra.codec.read_table(src, hdr)
+        metas[name] = (fpath, hdr, src, table)
 
-    ra.engine.run_tasks([(lambda n=n: _resolve(n)) for n in names])
     try:
+        ra.engine.run_tasks([(lambda n=n: _resolve(n)) for n in names])
         for name in names:
-            fpath, hdr, src = metas[name]
-            plain = not (hdr.flags & (ra.FLAG_ZLIB | ra.FLAG_CRC32_TRAILER)) and not hdr.big_endian
-            if not plain:
+            fpath, hdr, src, table = metas[name]
+            if table is not None:
+                arr = np.empty(hdr.shape, hdr.dtype())
+                arrays[name] = arr
+                if hdr.logical_nbytes:
+                    mv = memoryview(arr.reshape(-1).view(np.uint8)).cast("B")
+                    chunk_tasks += ra.codec.chunk_read_tasks(
+                        src, hdr, table, 0, hdr.logical_nbytes, mv
+                    )
+                continue
+            if not hdr.plain:
                 fallback.append((name, fpath))
                 continue
             arr = np.empty(hdr.shape, hdr.dtype())
@@ -174,7 +206,10 @@ def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str])
                     fds.append(src)
                 mv = memoryview(arr.reshape(-1).view(np.uint8)).cast("B")
                 jobs.append((src, hdr.nbytes, mv))
-        ra.engine.parallel_read_spans(jobs)
+        if chunk_tasks:  # one wave: slab preads + chunk decodes share the pool
+            ra.engine.run_tasks(ra.engine.span_read_tasks(jobs) + chunk_tasks)
+        else:
+            ra.engine.parallel_read_spans(jobs)
     finally:
         for fd in fds:
             os.close(fd)
@@ -231,18 +266,21 @@ def restore_resharded(
 ) -> np.ndarray:
     """Elastic restore: read only rows [start, stop) of one leaf — offset
     arithmetic on the .ra file, no full-array read (a different mesh's host
-    reads exactly its slice). Works on a checkpoint URL too: the row slab
-    becomes one ranged request."""
+    reads exactly its slice). Works on a checkpoint URL too (the row slab
+    becomes ranged requests) and on chunked-compressed leaves (DESIGN.md
+    §10): only the chunks overlapping the row slab are fetched + decoded."""
     manifest = _load_manifest(path)
     entry = manifest["leaves"][name]
     fpath = _join(path, entry["file"])
-    if not ra.is_url(fpath):
-        return np.asarray(ra.memmap_slice(fpath, row_start, row_stop))
-    from .. import remote
-
     hdr = ra.header_of(fpath)
-    if hdr.flags & ra.FLAG_ZLIB:
-        raise ra.RawArrayError("cannot row-slice a compressed payload")
+    chunked = bool(hdr.flags & ra.FLAG_CHUNKED)
+    if not ra.is_url(fpath) and not chunked:
+        return np.asarray(ra.memmap_slice(fpath, row_start, row_stop))
+    if hdr.compressed and not chunked:
+        raise ra.RawArrayError(
+            "cannot row-slice a whole-file-compressed payload; "
+            "save the checkpoint with chunked=True"
+        )
     if not hdr.shape:
         raise ra.RawArrayError("cannot row-slice a 0-d array")
     n = hdr.shape[0]
@@ -254,9 +292,25 @@ def restore_resharded(
         row *= d
     out = np.empty((row_stop - row_start,) + hdr.shape[1:], hdr.dtype())
     if out.nbytes:
-        reader = remote.get_reader(fpath)
-        mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
-        ra.engine.parallel_read_into(reader, hdr.nbytes + row_start * row, mv)
+        fd = None
+        if ra.is_url(fpath):
+            from .. import remote
+
+            src: object = remote.get_reader(fpath)
+        else:
+            src = fd = os.open(fpath, os.O_RDONLY)
+        try:
+            mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
+            if chunked:
+                table = ra.codec.read_table(src, hdr)
+                ra.engine.run_tasks(ra.codec.chunk_read_tasks(
+                    src, hdr, table, row_start * row, row_stop * row, mv
+                ))
+            else:
+                ra.engine.parallel_read_into(src, hdr.nbytes + row_start * row, mv)
+        finally:
+            if fd is not None:
+                os.close(fd)
     return out
 
 
@@ -276,10 +330,22 @@ def latest_step(directory: str) -> Optional[int]:
 class CheckpointManager:
     """Async, keep-last-k checkpoint driver for the training loop."""
 
-    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep: int = 3,
+        async_save: bool = True,
+        chunked: bool = False,
+        codec: Optional[str] = None,
+        chunk_bytes: Optional[int] = None,
+    ):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
+        self.chunked = chunked
+        self.codec = codec
+        self.chunk_bytes = chunk_bytes
         self._thread: Optional[threading.Thread] = None
         self.save_s = 0.0
         os.makedirs(directory, exist_ok=True)
@@ -299,7 +365,10 @@ class CheckpointManager:
 
         def run():
             t0 = time.perf_counter()
-            save_checkpoint(self.directory, step, host_params, host_opt, extra=extra)
+            save_checkpoint(
+                self.directory, step, host_params, host_opt, extra=extra,
+                chunked=self.chunked, codec=self.codec, chunk_bytes=self.chunk_bytes,
+            )
             self._gc()
             self.save_s += time.perf_counter() - t0
 

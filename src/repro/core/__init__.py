@@ -8,6 +8,7 @@ Public API mirrors the paper's reference implementations::
     m = ra.memmap("x.ra")          # zero-copy
 """
 
+from . import codec
 from . import engine
 from .header import Header, decode_header, read_header
 from .io import (
@@ -40,6 +41,7 @@ from .spec import (
     ELTYPE_STRUCT,
     ELTYPE_UINT,
     FLAG_BIG_ENDIAN,
+    FLAG_CHUNKED,
     FLAG_CRC32_TRAILER,
     FLAG_ZLIB,
     MAGIC,
@@ -49,6 +51,7 @@ from .spec import (
 
 __all__ = [
     "Header",
+    "codec",
     "engine",
     "read_header",
     "decode_header",
@@ -80,6 +83,7 @@ __all__ = [
     "ELTYPE_COMPLEX",
     "ELTYPE_BRAIN",
     "FLAG_BIG_ENDIAN",
+    "FLAG_CHUNKED",
     "FLAG_CRC32_TRAILER",
     "FLAG_ZLIB",
 ]

@@ -240,11 +240,7 @@ class _SpanJob(NamedTuple):
     view: memoryview
 
 
-def parallel_read_spans(jobs: Sequence[Tuple[object, int, object]]) -> int:
-    """One pool wave over many (fd, offset, view) reads — possibly spanning
-    multiple files (or remote readers; see ``pread_into``). Each large view
-    is further slab-split; everything is submitted together so cross-file
-    and intra-file parallelism share the same wave (no nested waiting)."""
+def _flatten_spans(jobs: Sequence[Tuple[object, int, object]]) -> Tuple[List[_SpanJob], int]:
     flat: List[_SpanJob] = []
     total = 0
     for fd, off, view in jobs:
@@ -255,6 +251,25 @@ def parallel_read_spans(jobs: Sequence[Tuple[object, int, object]]) -> int:
         for soff, sln in chunk_spans(off, mv.nbytes):
             rel = soff - off
             flat.append(_SpanJob(fd, soff, mv[rel : rel + sln]))
+    return flat, total
+
+
+def span_read_tasks(jobs: Sequence[Tuple[object, int, object]]) -> List[Callable[[], None]]:
+    """Flatten (fd, offset, view) reads into slab-granular zero-arg tasks —
+    the building blocks ``parallel_read_spans`` runs as one wave. Callers
+    that also have non-pread work (e.g. chunk decode tasks, DESIGN.md §10)
+    concatenate the lists and submit ONE ``run_tasks`` wave so both kinds
+    of work share the pool with no barrier between them."""
+    flat, _ = _flatten_spans(jobs)
+    return [(lambda j=j: pread_into(j.fd, j.offset, j.view)) for j in flat]
+
+
+def parallel_read_spans(jobs: Sequence[Tuple[object, int, object]]) -> int:
+    """One pool wave over many (fd, offset, view) reads — possibly spanning
+    multiple files (or remote readers; see ``pread_into``). Each large view
+    is further slab-split; everything is submitted together so cross-file
+    and intra-file parallelism share the same wave (no nested waiting)."""
+    flat, total = _flatten_spans(jobs)
     if not flat:
         return 0
     if len(flat) == 1 or not _parallel_ok(total):

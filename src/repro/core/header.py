@@ -12,6 +12,8 @@ from .spec import (
     FIXED_HEADER,
     FIXED_HEADER_BYTES,
     FLAG_BIG_ENDIAN,
+    FLAG_CHUNKED,
+    FLAG_CRC32_TRAILER,
     FLAG_ZLIB,
     KNOWN_FLAGS,
     MAGIC,
@@ -55,9 +57,23 @@ class Header:
     @property
     def logical_nbytes(self) -> int:
         """Uncompressed payload size implied by shape × elbyte (equals
-        ``data_length`` except for zlib payloads, where ``data_length`` is
-        the stored size)."""
+        ``data_length`` except for compressed payloads — zlib or chunked —
+        where ``data_length`` is the stored size)."""
         return self.count * self.elbyte
+
+    @property
+    def compressed(self) -> bool:
+        """Payload bytes on disk are not the raw array bytes."""
+        return bool(self.flags & (FLAG_ZLIB | FLAG_CHUNKED))
+
+    @property
+    def plain(self) -> bool:
+        """True when the data segment can be streamed byte-for-byte into a
+        native little-endian destination — the zero-copy fast path every
+        layer (local, remote, sharded, checkpoint) keys off."""
+        return not (
+            self.flags & (FLAG_ZLIB | FLAG_CHUNKED | FLAG_CRC32_TRAILER)
+        ) and not self.big_endian
 
     def dtype(self) -> np.dtype:
         return dtype_of(self.eltype, self.elbyte, big_endian=self.big_endian)
@@ -70,7 +86,7 @@ class Header:
         expected = self.logical_nbytes
         # The paper keeps data_length as a redundant sanity check; honor it —
         # except for compressed payloads where data_length is the stored size.
-        if not (self.flags & FLAG_ZLIB) and expected != self.data_length:
+        if not self.compressed and expected != self.data_length:
             raise RawArrayError(
                 f"data_length={self.data_length} inconsistent with "
                 f"shape={self.shape} x elbyte={self.elbyte} (= {expected})"

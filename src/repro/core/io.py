@@ -6,7 +6,10 @@ metadata); ``read`` parses the numeric header and hands back an ndarray;
 layout makes this a single ``np.memmap`` with a computed offset).
 
 Beyond-paper (flag-gated, backward compatible, DESIGN.md §7): optional CRC32
-trailer and zlib payload compression.
+trailer, whole-file zlib payload compression, and — the fast compression
+path — chunked compression (DESIGN.md §10): independently compressed chunks
+plus a trailer chunk table, decoded chunk-parallel on the engine pool, with
+partial reads touching only the chunks that overlap the request.
 
 Large payloads (>= ``RA_IO_PARALLEL_MIN``) are read and written through the
 slab-parallel engine (``repro.core.engine``, DESIGN.md §8); ``read_into``
@@ -27,9 +30,16 @@ from typing import Any, Optional, Tuple, Union
 
 import numpy as np
 
+from . import codec as chunked_codec
 from . import engine
 from .header import Header, decode_header, read_header
-from .spec import FLAG_BIG_ENDIAN, FLAG_CRC32_TRAILER, FLAG_ZLIB, RawArrayError
+from .spec import (
+    FLAG_BIG_ENDIAN,
+    FLAG_CHUNKED,
+    FLAG_CRC32_TRAILER,
+    FLAG_ZLIB,
+    RawArrayError,
+)
 
 PathLike = Union[str, os.PathLike]
 
@@ -86,9 +96,26 @@ def write(
     big_endian: bool = False,
     crc32: bool = False,
     compress: bool = False,
+    chunked: bool = False,
+    codec: Optional[str] = None,
+    chunk_bytes: Optional[int] = None,
 ) -> int:
-    """Write ``arr`` as a RawArray file. Returns bytes written."""
+    """Write ``arr`` as a RawArray file. Returns bytes written.
+
+    ``compress=True`` keeps the legacy whole-file zlib payload
+    (``FLAG_ZLIB``: single-stream decode, no partial reads). ``chunked=True``
+    — or simply passing ``codec=`` / ``chunk_bytes=`` — writes the payload as
+    independently compressed chunks plus a trailer chunk table
+    (``FLAG_CHUNKED``, DESIGN.md §10): compression runs chunk-parallel on
+    the engine pool here, and every read path decodes only the chunks it
+    needs. Defaults: codec ``RA_CODEC`` (zlib), chunk size ``RA_CHUNK_BYTES``
+    (1 MiB)."""
     _reject_url(path, "write")
+    chunked = chunked or codec is not None or chunk_bytes is not None
+    if compress and chunked:
+        raise RawArrayError(
+            "compress= (whole-file zlib) and chunked= are mutually exclusive"
+        )
     orig_shape = np.asarray(arr).shape
     arr = np.ascontiguousarray(arr)  # NB: promotes 0-d to (1,)...
     arr = arr.reshape(orig_shape)    # ...so restore the true rank (ndims=0 is legal)
@@ -101,30 +128,40 @@ def write(
         if arr.dtype.byteorder == ">":
             arr = arr.astype(arr.dtype.newbyteorder("<"), copy=False)
     payload = _as_bytes_view(arr)
-    if compress:
+    trailer_views: list = []  # chunk table, between payload and metadata
+    if chunked:
+        flags |= FLAG_CHUNKED
+        parts, table = chunked_codec.compress_chunked(
+            payload, codec=codec, chunk_bytes=chunk_bytes
+        )
+        stored_views = [memoryview(p) for p in parts]
+        trailer_views = [memoryview(table.encode())]
+    elif compress:
         flags |= FLAG_ZLIB
-        payload = memoryview(zlib.compress(bytes(payload), level=1))
+        stored_views = [memoryview(zlib.compress(bytes(payload), level=1))]
+    else:
+        stored_views = [payload]
     if crc32:
         flags |= FLAG_CRC32_TRAILER
-    hdr = Header.for_array(arr, flags=flags, data_length=len(payload))
-    head = hdr.encode()
-    tmp = os.fspath(path)
-    with open(tmp, "wb") as f:
-        if len(payload) < _SMALL:
-            buf = bytearray(head)
-            buf += payload
-            if metadata:
-                buf += metadata
-            if crc32:
-                buf += zlib.crc32(payload).to_bytes(4, "little")
+    data_length = sum(v.nbytes for v in stored_views)
+    hdr = Header.for_array(arr, flags=flags, data_length=data_length)
+    views = [memoryview(hdr.encode())] + stored_views + trailer_views
+    if metadata:
+        views.append(memoryview(metadata))
+    if crc32:
+        # file-level CRC of the stored data segment, always the last 4 bytes
+        crc = 0
+        for v in stored_views:
+            crc = zlib.crc32(v, crc)
+        views.append(memoryview(crc.to_bytes(4, "little")))
+    total = sum(v.nbytes for v in views)
+    with open(os.fspath(path), "wb") as f:
+        if total < _SMALL:
+            buf = bytearray()
+            for v in views:
+                buf += v
             f.write(buf)
-            return len(buf)
-        views = [memoryview(head), payload]
-        if metadata:
-            views.append(memoryview(metadata))
-        if crc32:
-            views.append(memoryview(zlib.crc32(payload).to_bytes(4, "little")))
-        total = sum(v.nbytes for v in views)
+            return total
         os.ftruncate(f.fileno(), total)  # preallocate, then go wide (DESIGN.md §8)
         return engine.parallel_write(f.fileno(), 0, views)
 
@@ -148,8 +185,13 @@ def read(
     with open(path, "rb", buffering=0) as f:
         head = f.read(4096)
         hdr = decode_header(head, strict_flags=strict_flags)
-        plain = not (hdr.flags & (FLAG_ZLIB | FLAG_CRC32_TRAILER)) and not hdr.big_endian
-        if plain and not with_metadata:
+        if hdr.flags & FLAG_CHUNKED:
+            return read_chunked(
+                f.fileno(), hdr,
+                size=os.fstat(f.fileno()).st_size,
+                with_metadata=with_metadata,
+            )
+        if hdr.plain and not with_metadata:
             out = np.empty(hdr.shape, dtype=hdr.dtype())
             if hdr.data_length == 0:
                 return out
@@ -201,6 +243,87 @@ def read(
     return arr
 
 
+def read_chunked(
+    src,
+    hdr: Header,
+    *,
+    size: int,
+    with_metadata: bool = False,
+) -> Union[np.ndarray, Tuple[np.ndarray, bytes]]:
+    """Decode a ``FLAG_CHUNKED`` payload from any positioned-read source
+    (int fd or ``RemoteReader``): read the trailer chunk table (two small
+    reads), then fetch + CRC-check + decompress every chunk concurrently on
+    the engine pool, each straight into its slice of the output array.
+
+    Integrity comes from the per-chunk CRC32s (checked on every decode);
+    the optional file-level CRC trailer is rechecked by ``racat verify``."""
+    table = chunked_codec.read_table(src, hdr)
+    out = np.empty(hdr.shape, hdr.dtype())
+    if hdr.logical_nbytes:
+        mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
+        chunked_codec.decompress_into(src, hdr, table, mv)
+    if hdr.big_endian:
+        out = out.astype(hdr.dtype().newbyteorder("<"))
+    if not with_metadata:
+        return out
+    start = hdr.nbytes + hdr.data_length + table.nbytes
+    tail = bytearray(max(0, size - start))
+    if tail:
+        engine.pread_into(src, start, tail)
+    meta = bytes(tail)
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        if len(meta) < 4:
+            raise RawArrayError("CRC flag set but trailer missing")
+        meta = meta[:-4]
+    return out, meta
+
+
+def _zlib_decompress_into(fd: int, hdr: Header, mv: memoryview, file_size: int) -> None:
+    """Stream-decompress a whole-file zlib payload directly into the
+    caller's buffer (no intermediate payload-sized allocation), verifying
+    the file-level CRC trailer incrementally when present."""
+    d = zlib.decompressobj()
+    off, end = hdr.nbytes, hdr.nbytes + hdr.data_length
+    pos = 0
+    crc = 0
+    buf = bytearray(min(1 << 20, max(1, hdr.data_length)))
+    while off < end:
+        n = min(len(buf), end - off)
+        piece = memoryview(buf)[:n]
+        engine.pread_into(fd, off, piece)
+        off += n
+        if hdr.flags & FLAG_CRC32_TRAILER:
+            crc = zlib.crc32(piece, crc)
+        raw = d.decompress(piece)
+        if pos + len(raw) > mv.nbytes:
+            raise RawArrayError(
+                f"decompressed payload exceeds {mv.nbytes} bytes, header shape "
+                f"{hdr.shape} x elbyte={hdr.elbyte}"
+            )
+        mv[pos : pos + len(raw)] = raw
+        pos += len(raw)
+    raw = d.flush()
+    if pos + len(raw) > mv.nbytes:
+        raise RawArrayError(
+            f"decompressed payload exceeds {mv.nbytes} bytes, header shape "
+            f"{hdr.shape} x elbyte={hdr.elbyte}"
+        )
+    mv[pos : pos + len(raw)] = raw
+    pos += len(raw)
+    if pos != hdr.logical_nbytes:
+        raise RawArrayError(
+            f"decompressed payload is {pos} bytes, header shape "
+            f"{hdr.shape} x elbyte={hdr.elbyte} wants {hdr.logical_nbytes}"
+        )
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        if file_size < end + 4:
+            raise RawArrayError("CRC flag set but trailer missing")
+        stored = bytearray(4)
+        engine.pread_into(fd, file_size - 4, stored)
+        if int.from_bytes(stored, "little") != crc:
+            raise RawArrayError("CRC32 mismatch: data segment corrupted")
+
+
 def read_into(path: PathLike, out: np.ndarray) -> np.ndarray:
     """Read a RawArray file's payload straight into a preallocated array.
 
@@ -210,8 +333,10 @@ def read_into(path: PathLike, out: np.ndarray) -> np.ndarray:
     of a larger batch array — no intermediate allocation is made, and large
     payloads are read with slab-parallel preads.
 
-    Compressed / big-endian / CRC-trailed payloads fall back to ``read`` +
-    one copy (they cannot be streamed in place).
+    Compressed payloads honor ``out=`` too: chunked files decompress
+    chunk-parallel straight into the caller's buffer, whole-file zlib
+    streams through ``decompressobj`` into it. Only big-endian payloads
+    fall back to ``read`` + one converting copy.
     """
     if is_url(path):
         return _remote().remote_read_into(path, out)
@@ -226,12 +351,22 @@ def read_into(path: PathLike, out: np.ndarray) -> np.ndarray:
             raise RawArrayError(f"read_into: out.dtype {out.dtype} != file {hdr.dtype()}")
         if not out.flags.c_contiguous:
             raise RawArrayError("read_into: out must be C-contiguous")
-        plain = not (hdr.flags & (FLAG_ZLIB | FLAG_CRC32_TRAILER)) and not hdr.big_endian
-        if plain:
-            if hdr.data_length:
-                mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
-                engine.parallel_read_into(f.fileno(), hdr.nbytes, mv)
-            return out
+        if not hdr.big_endian:
+            mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
+            if hdr.flags & FLAG_CHUNKED:
+                table = chunked_codec.read_table(f.fileno(), hdr)
+                if hdr.logical_nbytes:
+                    chunked_codec.decompress_into(f.fileno(), hdr, table, mv)
+                return out
+            if hdr.flags & FLAG_ZLIB:
+                _zlib_decompress_into(
+                    f.fileno(), hdr, mv, os.fstat(f.fileno()).st_size
+                )
+                return out
+            if not (hdr.flags & FLAG_CRC32_TRAILER):
+                if hdr.data_length:
+                    engine.parallel_read_into(f.fileno(), hdr.nbytes, mv)
+                return out
     out[...] = read(path)
     return out
 
@@ -243,7 +378,10 @@ def read_metadata(path: PathLike) -> bytes:
         return _remote().remote_read_metadata(path)
     with open(path, "rb") as f:
         hdr = read_header(f)
-        f.seek(hdr.nbytes + hdr.data_length)
+        off = hdr.nbytes + hdr.data_length
+        if hdr.flags & FLAG_CHUNKED:
+            off += chunked_codec.table_nbytes(f.fileno(), hdr)
+        f.seek(off)
         tail = f.read()
     if hdr.flags & FLAG_CRC32_TRAILER:
         tail = tail[:-4]
@@ -265,7 +403,7 @@ def memmap(path: PathLike, mode: str = "r") -> np.ndarray:
     _reject_url(path, "memmap")
     with open(path, "rb") as f:
         hdr = read_header(f)
-    if hdr.flags & FLAG_ZLIB:
+    if hdr.compressed:
         raise RawArrayError("cannot memory-map a compressed payload")
     if hdr.big_endian:
         raise RawArrayError("cannot memory-map a big-endian payload on LE host")
@@ -285,7 +423,7 @@ def memmap_slice(path: PathLike, start: int, stop: int, mode: str = "r") -> np.n
     _reject_url(path, "memmap")
     with open(path, "rb") as f:
         hdr = read_header(f)
-    if hdr.flags & FLAG_ZLIB:
+    if hdr.compressed:
         raise RawArrayError("cannot memory-map a compressed payload")
     if not hdr.shape:
         raise RawArrayError("cannot row-slice a 0-d array")
@@ -306,13 +444,30 @@ def memmap_slice(path: PathLike, start: int, stop: int, mode: str = "r") -> np.n
 
 
 def append_metadata(path: PathLike, metadata: bytes) -> None:
-    """Append user metadata to an existing file (paper: 'can be anything')."""
+    """Append user metadata to an existing file (paper: 'can be anything').
+
+    On a CRC-trailed file the 4-byte CRC must stay the *last* bytes of the
+    file (that is where every reader splits metadata from checksum), so the
+    metadata is spliced in front of it: naively appending after the trailer
+    would make readers treat the tail of the new metadata as the checksum
+    and fail — or worse, silently mis-verify."""
     _reject_url(path, "append_metadata")
     hdr = header_of(path)
-    if hdr.flags & FLAG_CRC32_TRAILER:
-        raise RawArrayError("append to CRC-trailed file would corrupt the trailer")
-    with open(path, "ab") as f:
-        f.write(metadata)
+    if not (hdr.flags & FLAG_CRC32_TRAILER):
+        with open(path, "ab") as f:
+            f.write(metadata)
+        return
+    with open(path, "r+b") as f:
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        if size < hdr.nbytes + hdr.data_length + 4:
+            raise RawArrayError("CRC flag set but trailer missing")
+        f.seek(size - 4)
+        crc = f.read(4)
+        f.seek(size - 4)
+        # one write, not two: a crash between "overwrite CRC with metadata"
+        # and "re-append CRC" would leave the file permanently mis-trailed
+        f.write(bytes(metadata) + crc)
 
 
 def write_like(path: PathLike, header: Header, payload: bytes) -> None:

@@ -7,10 +7,17 @@ in-tree equivalent plus a self-test that our files *are* od-compatible::
     $ PYTHONPATH=src python -m repro.core.racat data test.ra | head
     $ PYTHONPATH=src python -m repro.core.racat od test.ra   # prints the od commands
     $ PYTHONPATH=src python -m repro.core.racat verify test.ra  # integrity check
+    $ PYTHONPATH=src python -m repro.core.racat inspect test.ra # chunk table
+    $ PYTHONPATH=src python -m repro.core.racat compress in.ra out.ra --codec zlib
 
-``header``, ``meta``, ``data``, and ``verify`` also accept ``http(s)://``
-URLs — introspection against a live byte-range server (DESIGN.md §9) via
-the remote client, e.g. ``racat header http://host:8742/train/x.ra``.
+``header``, ``meta``, ``data``, ``inspect``, and ``verify`` also accept
+``http(s)://`` URLs — introspection against a live byte-range server
+(DESIGN.md §9) via the remote client, e.g. ``racat header
+http://host:8742/train/x.ra``. Remote ``verify`` fetches the file exactly
+ONCE and reuses that payload for every recheck (header, CRC, zlib, chunk
+table) — never a header fast-path fetch plus a second full download.
+``compress`` rewrites any RawArray file (local or URL source) as a
+chunk-compressed one (DESIGN.md §10), preserving user metadata.
 """
 
 from __future__ import annotations
@@ -18,20 +25,36 @@ from __future__ import annotations
 import argparse
 import sys
 import zlib
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
+from . import codec as chunked_codec
+from . import io as raio
 from .header import Header, decode_header
 from .io import header_of, is_url, read, read_metadata
-from .spec import ELTYPE_NAMES, FLAG_CRC32_TRAILER, FLAG_ZLIB, RawArrayError
+from .spec import (
+    ELTYPE_NAMES,
+    FLAG_CHUNKED,
+    FLAG_CRC32_TRAILER,
+    FLAG_ZLIB,
+    RawArrayError,
+)
 
 
 def format_header(hdr: Header) -> str:
+    notes = [
+        name
+        for bit, name in [
+            (1, "big-endian"), (FLAG_CRC32_TRAILER, "crc32"),
+            (FLAG_ZLIB, "zlib"), (FLAG_CHUNKED, "chunked"),
+        ]
+        if hdr.flags & bit
+    ]
     lines = [
         f"magic        rawarray (0x7961727261776172)",
         f"flags        {hdr.flags:#x}"
-        + (" (big-endian)" if hdr.big_endian else ""),
+        + (f" ({', '.join(notes)})" if notes else ""),
         f"eltype       {hdr.eltype} ({ELTYPE_NAMES.get(hdr.eltype, '?')})",
         f"elbyte       {hdr.elbyte}",
         f"data_length  {hdr.data_length}",
@@ -81,7 +104,7 @@ def verify_file(path: str) -> List[str]:
         hdr = decode_header(blob, strict_flags=False)
     except RawArrayError as e:
         return [f"bad header: {e}"]
-    if not (hdr.flags & FLAG_ZLIB) and hdr.data_length != hdr.logical_nbytes:
+    if not hdr.compressed and hdr.data_length != hdr.logical_nbytes:
         problems.append(
             f"data_length={hdr.data_length} inconsistent with "
             f"shape={list(hdr.shape)} x elbyte={hdr.elbyte} (= {hdr.logical_nbytes})"
@@ -113,14 +136,121 @@ def verify_file(path: str) -> List[str]:
                     f"decompressed payload is {len(raw)} bytes, shape x elbyte "
                     f"wants {hdr.logical_nbytes}"
                 )
+    if hdr.flags & FLAG_CHUNKED:
+        problems += _verify_chunked(hdr, payload, trailer)
     return problems
+
+
+def _verify_chunked(hdr: Header, payload: bytes, trailer: bytes) -> List[str]:
+    """Recheck a chunked payload against its trailer chunk table: table
+    parse + geometry, per-chunk CRC32 of the stored bytes, and that every
+    chunk decompresses to exactly its raw span (DESIGN.md §10)."""
+    try:
+        table = chunked_codec.ChunkTable.decode(
+            trailer, logical_nbytes=hdr.logical_nbytes, stored_nbytes=hdr.data_length
+        )
+    except RawArrayError as e:
+        return [f"bad chunk table: {e}"]
+    problems: List[str] = []
+    try:
+        codec = chunked_codec.get_codec(table.codec_id)
+    except RawArrayError as e:
+        return [str(e)]
+    raw_total = 0
+    for i in range(table.nchunks):
+        so = int(table.stored_offsets[i])
+        slen = int(table.stored_lens[i])
+        stored = payload[so : so + slen]
+        if zlib.crc32(stored) != int(table.crcs[i]):
+            problems.append(f"chunk {i} CRC32 mismatch: stored bytes corrupted")
+            continue
+        try:
+            raw = codec.decompress(stored)
+        except Exception as e:  # codec-specific error types
+            problems.append(f"chunk {i} does not decompress: {e}")
+            continue
+        want = table.raw_len(i, hdr.logical_nbytes)
+        if len(raw) != want:
+            problems.append(
+                f"chunk {i} decompressed to {len(raw)} bytes, table wants {want}"
+            )
+        raw_total += len(raw)
+    if not problems and raw_total != hdr.logical_nbytes:
+        problems.append(
+            f"chunks decompress to {raw_total} bytes total, shape x elbyte "
+            f"wants {hdr.logical_nbytes}"
+        )
+    return problems
+
+
+def inspect_file(path: str) -> str:
+    """Header plus — for chunked files — a chunk-table summary."""
+    hdr = header_of(path)
+    lines = [format_header(hdr)]
+    if not (hdr.flags & FLAG_CHUNKED):
+        lines.append("chunks       none (payload is not chunk-compressed)")
+        return "\n".join(lines)
+    # the table is two small positioned reads — never the payload (for a
+    # URL: two ranged GETs through the pooled reader)
+    if is_url(path):
+        from .. import remote
+
+        table = chunked_codec.read_table(remote.get_reader(path), hdr)
+    else:
+        with open(path, "rb") as f:
+            table = chunked_codec.read_table(f.fileno(), hdr)
+    codec = chunked_codec.get_codec(table.codec_id)
+    ratio = hdr.data_length / hdr.logical_nbytes if hdr.logical_nbytes else 1.0
+    lines += [
+        f"codec        {table.codec_id} ({codec.name})",
+        f"chunk_bytes  {table.chunk_bytes}",
+        f"nchunks      {table.nchunks}",
+        f"stored       {hdr.data_length} ({ratio:.3f} of {hdr.logical_nbytes} raw)",
+        f"table_bytes  {table.nbytes}",
+    ]
+    if table.nchunks:
+        lens = table.stored_lens.astype(np.int64)
+        lines.append(
+            f"chunk stored min/mean/max  {int(lens.min())}/"
+            f"{int(lens.mean())}/{int(lens.max())}"
+        )
+    return "\n".join(lines)
+
+
+def compress_file(
+    src: str,
+    dst: str,
+    *,
+    codec: str = None,
+    chunk_bytes: int = None,
+    crc32: bool = False,
+) -> Tuple[int, int]:
+    """Rewrite any RawArray file (local path or URL) as a chunk-compressed
+    one, preserving user metadata. Returns (logical, stored) byte sizes."""
+    arr, meta = read(src, with_metadata=True, strict_flags=False)
+    raio.write(
+        dst, arr, metadata=meta or None,
+        chunked=True, codec=codec, chunk_bytes=chunk_bytes, crc32=crc32,
+    )
+    hdr = header_of(dst)
+    return hdr.logical_nbytes, hdr.data_length
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(prog="racat", description=__doc__)
-    p.add_argument("cmd", choices=["header", "data", "meta", "od", "verify"])
+    p.add_argument(
+        "cmd", choices=["header", "data", "meta", "od", "verify", "inspect", "compress"]
+    )
     p.add_argument("path", help="file path or http(s):// URL")
+    p.add_argument("dst", nargs="?", default=None,
+                   help="output path (compress only)")
     p.add_argument("--limit", type=int, default=16, help="max elements to print")
+    p.add_argument("--codec", default=None,
+                   help="codec name for compress (default: RA_CODEC or zlib)")
+    p.add_argument("--chunk-bytes", type=int, default=None,
+                   help="raw chunk size for compress (default: RA_CHUNK_BYTES or 1 MiB)")
+    p.add_argument("--crc32", action="store_true",
+                   help="also write a file-level CRC trailer (compress only)")
     args = p.parse_args(argv)
 
     if args.cmd == "verify":
@@ -130,6 +260,21 @@ def main(argv=None) -> int:
                 print(f"FAIL {args.path}: {msg}", file=sys.stderr)
             return 1
         print(f"OK {args.path}")
+        return 0
+
+    if args.cmd == "compress":
+        if not args.dst:
+            p.error("compress needs an output path: racat compress <src> <dst>")
+        logical, stored = compress_file(
+            args.path, args.dst,
+            codec=args.codec, chunk_bytes=args.chunk_bytes, crc32=args.crc32,
+        )
+        ratio = stored / logical if logical else 1.0
+        print(f"OK {args.dst}: {logical} -> {stored} bytes ({ratio:.3f})")
+        return 0
+
+    if args.cmd == "inspect":
+        print(inspect_file(args.path))
         return 0
 
     hdr = header_of(args.path)

@@ -33,10 +33,11 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import codec as chunked_codec
 from . import engine
 from . import io as raio
 from .io import is_url, join_path as _join
-from .spec import RawArrayError
+from .spec import FLAG_CHUNKED, RawArrayError
 
 INDEX_NAME = "index.json"
 
@@ -80,6 +81,14 @@ def _shard_name(i: int) -> str:
     return f"shard_{i:05d}.ra"
 
 
+def _decode_rows(path: str, a: int, b: int, dst) -> None:
+    """Fallback for shards that are not range-addressable (whole-file zlib,
+    big-endian): decode the shard and copy rows [a, b) into ``dst``."""
+    arr = np.asarray(raio.read(path))
+    rows = np.ascontiguousarray(arr[a:b])
+    dst[:] = memoryview(rows.view(np.uint8).reshape(-1))
+
+
 def write_sharded(
     dirpath: str,
     arr: np.ndarray,
@@ -87,8 +96,15 @@ def write_sharded(
     nshards: int,
     axis: int = 0,
     workers: int = 4,
+    chunked: bool = False,
+    codec: Optional[str] = None,
+    chunk_bytes: Optional[int] = None,
 ) -> ShardIndex:
-    """Split ``arr`` along ``axis`` into ``nshards`` RawArray files."""
+    """Split ``arr`` along ``axis`` into ``nshards`` RawArray files.
+
+    ``chunked=True`` (or ``codec=``/``chunk_bytes=``) writes every shard
+    chunk-compressed (DESIGN.md §10); ``read_slice`` then decodes only the
+    chunks overlapping the requested rows."""
     if is_url(dirpath):
         raise RawArrayError(f"write_sharded is local-only; got URL {dirpath}")
     if axis != 0:
@@ -100,7 +116,13 @@ def write_sharded(
     files = [_shard_name(i) for i in range(nshards)]
 
     def _write(i: int) -> None:
-        raio.write(os.path.join(dirpath, files[i]), arr[bounds[i] : bounds[i + 1]])
+        raio.write(
+            os.path.join(dirpath, files[i]),
+            arr[bounds[i] : bounds[i + 1]],
+            chunked=chunked,
+            codec=codec,
+            chunk_bytes=chunk_bytes,
+        )
 
     if workers > 1 and nshards > 1:
         with ThreadPoolExecutor(max_workers=workers) as pool:
@@ -200,17 +222,36 @@ def read_slice(
             continue
         a, b = max(start, lo) - lo, min(stop, hi) - lo
         overlaps.append((i, _join(dirpath, fname), lo, a, b))
-    # resolve shard headers concurrently: remotely each one is an HTTP round
-    # trip, and doing them serially would dominate wide slices' latency
+    # resolve shard headers (and, for chunked shards, their chunk tables +
+    # sources) concurrently: remotely each one is an HTTP round trip, and
+    # doing them serially would dominate wide slices' latency
     hdrs: dict = {}
+    tables: dict = {}
+    srcs: dict = {}  # chunked shards: fd / reader, opened once and reused
+    fds: List[int] = []
 
     def _resolve(i: int, path: str) -> None:
-        hdrs[i] = raio.header_of(path)
+        hdr = raio.header_of(path)
+        hdrs[i] = hdr
+        # big-endian chunked shards take the decode-and-copy fallback (the
+        # chunk fast path would stream BE bytes into a native-LE buffer)
+        if hdr.flags & FLAG_CHUNKED and not hdr.big_endian:
+            if is_url(path):
+                from .. import remote
 
-    engine.run_tasks([(lambda i=i, p=p: _resolve(i, p)) for i, p, _, _, _ in overlaps])
-    fds: List[int] = []
+                src = remote.get_reader(path)  # registry-pooled; not closed here
+            else:
+                src = os.open(path, os.O_RDONLY)
+                fds.append(src)
+            srcs[i] = src
+            tables[i] = chunked_codec.read_table(src, hdr)
+
     jobs = []
+    tasks = []  # chunk decodes + whole-shard decode fallbacks
     try:
+        engine.run_tasks(
+            [(lambda i=i, p=p: _resolve(i, p)) for i, p, _, _, _ in overlaps]
+        )
         for i, path, lo, a, b in overlaps:
             hdr = hdrs[i]
             if hdr.shape[1:] != rest or hdr.shape[0] != offs[i + 1] - lo:
@@ -219,16 +260,28 @@ def read_slice(
                 )
             if row_nbytes == 0 or b == a:
                 continue
-            if is_url(path):
-                from .. import remote
-
-                src = remote.get_reader(path)  # registry-pooled; not closed here
-            else:
-                src = os.open(path, os.O_RDONLY)
-                fds.append(src)
             dst = mv[(lo + a - start) * row_nbytes : (lo + b - start) * row_nbytes]
-            jobs.append((src, hdr.nbytes + a * row_nbytes, dst))
-        engine.parallel_read_spans(jobs)
+            if i in srcs:
+                tasks += chunked_codec.chunk_read_tasks(
+                    srcs[i], hdr, tables[i], a * row_nbytes, b * row_nbytes, dst
+                )
+            elif hdr.compressed or hdr.big_endian:
+                # whole-file zlib / big-endian: not range-addressable — decode
+                # the shard on a pool thread and copy the requested rows
+                tasks.append(lambda p=path, a=a, b=b, d=dst: _decode_rows(p, a, b, d))
+            else:
+                if is_url(path):
+                    from .. import remote
+
+                    src = remote.get_reader(path)  # registry-pooled; not closed here
+                else:
+                    src = os.open(path, os.O_RDONLY)
+                    fds.append(src)
+                jobs.append((src, hdr.nbytes + a * row_nbytes, dst))
+        if tasks:  # one wave: slab preads + chunk decodes share the pool
+            engine.run_tasks(engine.span_read_tasks(jobs) + tasks)
+        else:
+            engine.parallel_read_spans(jobs)
     finally:
         for fd in fds:
             os.close(fd)
@@ -264,7 +317,7 @@ def read_slice_naive(
             continue
         a, b = max(start, lo) - lo, min(stop, hi) - lo
         path = _join(dirpath, fname)
-        if is_url(path):
+        if is_url(path) or raio.header_of(path).compressed:
             pieces.append(np.asarray(raio.read(path))[a:b])
         else:
             pieces.append(np.asarray(raio.memmap_slice(path, a, b)))

@@ -75,8 +75,11 @@ ELTYPE_NAMES = {
 FLAG_BIG_ENDIAN = 1 << 0
 FLAG_CRC32_TRAILER = 1 << 1   # 4-byte CRC32 of data segment appended AFTER metadata
 FLAG_ZLIB = 1 << 2            # payload is zlib-compressed (data_length = compressed size)
+FLAG_CHUNKED = 1 << 3         # payload is independently compressed chunks + a
+                              # trailer chunk table (DESIGN.md §10);
+                              # data_length = stored (compressed) size
 
-KNOWN_FLAGS = FLAG_BIG_ENDIAN | FLAG_CRC32_TRAILER | FLAG_ZLIB
+KNOWN_FLAGS = FLAG_BIG_ENDIAN | FLAG_CRC32_TRAILER | FLAG_ZLIB | FLAG_CHUNKED
 
 MAX_NDIMS = 64  # sanity bound; format itself allows 2**64
 

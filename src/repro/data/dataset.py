@@ -35,6 +35,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .. import core as ra
+from ..core import codec as chunked_codec
 from ..core import engine
 
 MANIFEST = "manifest.json"
@@ -52,12 +53,28 @@ def dataset_manifest(root: str) -> Dict[str, Any]:
 
 
 class RaDatasetWriter:
-    """Streaming writer: append row batches, shards roll at ``shard_rows``."""
+    """Streaming writer: append row batches, shards roll at ``shard_rows``.
 
-    def __init__(self, root: str, fields: Dict[str, Tuple[Tuple[int, ...], str]], shard_rows: int = 8192):
+    ``chunked=True`` (or ``codec=``/``chunk_bytes=``) writes every shard
+    file chunk-compressed (DESIGN.md §10); readers then decode only the
+    chunks overlapping each row request."""
+
+    def __init__(
+        self,
+        root: str,
+        fields: Dict[str, Tuple[Tuple[int, ...], str]],
+        shard_rows: int = 8192,
+        *,
+        chunked: bool = False,
+        codec: Optional[str] = None,
+        chunk_bytes: Optional[int] = None,
+    ):
         self.root = root
         self.fields = fields  # name -> (row_shape, dtype)
         self.shard_rows = shard_rows
+        self.chunked = chunked or codec is not None or chunk_bytes is not None
+        self.codec = codec
+        self.chunk_bytes = chunk_bytes
         self._buf: Dict[str, List[np.ndarray]] = {k: [] for k in fields}
         self._buffered = 0
         self._shards: List[Dict[str, Any]] = []
@@ -85,7 +102,13 @@ class RaDatasetWriter:
             take, rest = buf[:rows], buf[rows:]
             self._buf[name] = [rest] if rest.size else []
             fname = f"{name}_{idx:05d}.ra"
-            ra.write(os.path.join(self.root, fname), take)
+            ra.write(
+                os.path.join(self.root, fname),
+                take,
+                chunked=self.chunked,
+                codec=self.codec,
+                chunk_bytes=self.chunk_bytes,
+            )
             files[name] = fname
         self._shards.append({"files": files, "rows": rows})
         self._buffered -= rows
@@ -142,15 +165,16 @@ class RaDataset:
         self.total_rows = off
         self._bounds = np.array([s.row_offset for s in self.shards] + [off])
         self._mmaps: Dict[Tuple[int, str], np.ndarray] = {}
-        # (shard, field) -> (src, data_offset, row_nbytes) for positioned
-        # reads; src is an int fd locally, a pooled RemoteReader for URLs
-        self._fds: Dict[Tuple[int, str], Tuple[Any, int, int]] = {}
+        # (shard, field) -> (src, data_offset, row_nbytes, header, chunk
+        # table or None) for positioned reads; src is an int fd locally, a
+        # pooled RemoteReader for URLs
+        self._fds: Dict[Tuple[int, str], Tuple[Any, int, int, Any, Any]] = {}
 
     def __len__(self) -> int:
         return self.total_rows
 
     def close(self) -> None:
-        for fd, _, _ in self._fds.values():
+        for fd, *_ in self._fds.values():
             if not isinstance(fd, int):
                 continue  # remote readers live in the shared registry
             try:
@@ -178,14 +202,26 @@ class RaDataset:
             self._mmaps[key] = ra.memmap(path)
         return self._mmaps[key]
 
-    def _fmeta(self, shard_idx: int, field: str) -> Tuple[Any, int, int]:
-        """(src, payload offset, row bytes) for one shard file, cached.
-        ``src`` is whatever ``engine.pread_into`` accepts: an int fd for a
-        local file, a pooled ``RemoteReader`` for a URL."""
+    def _fmeta(self, shard_idx: int, field: str) -> Tuple[Any, int, int, Any, Any]:
+        """(src, payload offset, row bytes, header, chunk table | None) for
+        one shard file, cached. ``src`` is whatever ``engine.pread_into``
+        accepts: an int fd for a local file, a pooled ``RemoteReader`` for a
+        URL. A chunked shard carries its decoded chunk table so row spans
+        map to chunk runs without re-reading the trailer."""
         key = (shard_idx, field)
         if key not in self._fds:
             path = _join(self.root, self.shards[shard_idx].files[field])
             hdr = ra.header_of(path)
+            if hdr.compressed and not (hdr.flags & ra.FLAG_CHUNKED):
+                raise ra.RawArrayError(
+                    f"{path}: whole-file zlib shards are not range-addressable; "
+                    f"rewrite the dataset with chunked compression "
+                    f"(RaDatasetWriter(chunked=True) or `racat compress`)"
+                )
+            if hdr.big_endian:
+                raise ra.RawArrayError(
+                    f"{path}: big-endian shards are not supported in datasets"
+                )
             row_nbytes = hdr.elbyte
             for d in hdr.shape[1:]:
                 row_nbytes *= d
@@ -195,8 +231,20 @@ class RaDataset:
                 src: Any = remote.get_reader(path)
             else:
                 src = os.open(path, os.O_RDONLY)
-            self._fds[key] = (src, hdr.nbytes, row_nbytes)
+            table = (
+                chunked_codec.read_table(src, hdr)
+                if hdr.flags & ra.FLAG_CHUNKED
+                else None
+            )
+            self._fds[key] = (src, hdr.nbytes, row_nbytes, hdr, table)
         return self._fds[key]
+
+    def _raw_reader(self, shard_idx: int, field: str):
+        """``read_raw(raw_off, view)`` closure over one plain shard file:
+        one positioned read at the payload offset (chunked fields never
+        come through here — gather plans them per chunk)."""
+        src, doff, *_ = self._fmeta(shard_idx, field)
+        return lambda off, view: engine.pread_into(src, doff + off, view)
 
     def _resolve_fmeta(self, shard_idx_list, fields) -> None:
         """Resolve the (shard, field) sources a read will touch in one
@@ -214,24 +262,30 @@ class RaDataset:
             engine.run_tasks([(lambda s=si, g=f: self._fmeta(s, g)) for si, f in pending])
 
     def io_stats(self) -> Dict[str, int]:
-        """Block-cache counters over this dataset's remote readers (empty
-        for a local dataset) — the observable that says whether an epoch
-        hit RAM or the wire. NB: readers default to the process-wide
-        ``remote.shared_cache()``, so with other remote traffic in the same
-        process (another dataset, a checkpoint restore) these counters are
-        process-global, not per-dataset; pass each reader its own
-        ``BlockCache`` for isolated accounting."""
-        if not self.is_remote:
-            return {}
-        caches = []
-        for src, _, _ in self._fds.values():
-            cache = getattr(src, "cache", None)
-            if cache is not None and all(c is not cache for c in caches):
-                caches.append(cache)
+        """I/O observability counters: block-cache hit/miss/eviction over
+        this dataset's remote readers (empty for a local dataset), plus the
+        codec's chunk decode counters (``chunk_reads`` /
+        ``chunk_stored_bytes`` / ``chunk_raw_bytes``) when any chunked
+        decoding has happened — the observable that proves partial reads of
+        compressed shards touch only overlapping chunks. NB: readers
+        default to the process-wide ``remote.shared_cache()`` and the chunk
+        counters are process-wide too, so with other traffic in the same
+        process these counters are process-global, not per-dataset; pass
+        each reader its own ``BlockCache`` (and ``codec.reset_stats()``)
+        for isolated accounting."""
         out: Dict[str, int] = {}
-        for c in caches:
-            for k, v in c.stats().items():
-                out[k] = out.get(k, 0) + v
+        if self.is_remote:
+            caches = []
+            for src, *_ in self._fds.values():
+                cache = getattr(src, "cache", None)
+                if cache is not None and all(c is not cache for c in caches):
+                    caches.append(cache)
+            for c in caches:
+                for k, v in c.stats().items():
+                    out[k] = out.get(k, 0) + v
+        cstats = chunked_codec.stats()
+        if any(cstats.values()):
+            out.update(cstats)
         return out
 
     def _field_spec(self, field: str) -> Tuple[Tuple[int, ...], np.dtype]:
@@ -279,19 +333,29 @@ class RaDataset:
         ]
         self._resolve_fmeta(touched, fields)
         jobs = []
+        tasks = []  # per-chunk decode tasks for chunked shards
         for i in touched:
             sh = self.shards[i]
             lo, hi = sh.row_offset, sh.row_offset + sh.rows
             a, b = max(start, lo) - lo, min(stop, hi) - lo
             for f in fields:
-                fd, doff, rnb = self._fmeta(i, f)
+                fd, doff, rnb, hdr, table = self._fmeta(i, f)
                 if rnb == 0:
                     continue
                 dst = result[f]
                 mv = memoryview(dst.reshape(-1).view(np.uint8)).cast("B")
                 o = lo + a - start
-                jobs.append((fd, doff + a * rnb, mv[o * rnb : (o + b - a) * rnb]))
-        engine.parallel_read_spans(jobs)
+                dview = mv[o * rnb : (o + b - a) * rnb]
+                if table is None:
+                    jobs.append((fd, doff + a * rnb, dview))
+                else:
+                    tasks += chunked_codec.chunk_read_tasks(
+                        fd, hdr, table, a * rnb, b * rnb, dview
+                    )
+        if tasks:  # one wave: slab preads + chunk decodes share the pool
+            engine.run_tasks(engine.span_read_tasks(jobs) + tasks)
+        else:
+            engine.parallel_read_spans(jobs)
         return result
 
     def gather(
@@ -321,34 +385,50 @@ class RaDataset:
         order = np.argsort(indices, kind="stable")
         sidx = indices[order]
         cuts = np.searchsorted(sidx, self._bounds)
-        # the plan depends only on the indices, not the field: compute once
-        # per shard, reuse for every field
-        plans = []  # (si, runs, leftover)
-        for si in range(len(self.shards)):
+        touched = [
+            si for si in range(len(self.shards)) if cuts[si] != cuts[si + 1]
+        ]
+        # sources must be resolved BEFORE planning: a chunked field is
+        # planned per CHUNK (each needed chunk decoded exactly once, rows
+        # scattered out of it), a plain field per coalesced row run —
+        # chunked-ness is a per-field property, so a shard mixing chunked
+        # and plain field files gets both plan kinds
+        self._resolve_fmeta(touched, fields)
+        plans = []  # (si, local rows, destination slots, plain (runs, leftover))
+        for si in touched:
             a, b = cuts[si], cuts[si + 1]
-            if a == b:
-                continue
             local = sidx[a:b] - self.shards[si].row_offset
-            # remote: no mmap to service sparse leftovers, so every request
-            # becomes a ranged read (min_run=1); singleton runs are absorbed
-            # by the reader's block cache
-            min_run = 1 if self.is_remote else None
-            runs, leftover = engine.coalesce_sorted(local, np.arange(a, b),
+            plain_plan = None
+            if any(self._fmeta(si, f)[4] is None for f in fields):
+                # remote: no mmap to service sparse leftovers, so every
+                # request becomes a ranged read (min_run=1); singleton runs
+                # are absorbed by the block cache
+                min_run = 1 if self.is_remote else None
+                plain_plan = engine.coalesce_sorted(local, np.arange(a, b),
                                                     min_run=min_run)
-            plans.append((si, runs, leftover))
-        self._resolve_fmeta([si for si, _, _ in plans], fields)
+            plans.append((si, local, order[a:b], plain_plan))
         tasks = []
         fancy = []  # deferred sparse leftovers: (si, field, positions, local)
         for f in fields:
             rshape, dtype = self._field_spec(f)
             sample = result[f]
-            for si, runs, leftover in plans:
+            for si, local, pos, plain_plan in plans:
+                src, doff, rnb, hdr, table = self._fmeta(si, f)
+                if rnb == 0:
+                    continue
+                if table is not None:
+                    mv = memoryview(sample.reshape(-1).view(np.uint8)).cast("B")
+                    tasks += chunked_codec.gather_rows_tasks(
+                        src, hdr, table, rnb, local, pos, mv
+                    )
+                    continue
+                runs, leftover = plain_plan
                 if runs:
-                    fd, doff, rnb = self._fmeta(si, f)
+                    read_raw = self._raw_reader(si, f)
                     for run in runs:
                         tasks.append(
                             self._run_task(run, sidx, order, sample, rshape, dtype,
-                                           fd, doff, rnb, self.shards[si].row_offset)
+                                           read_raw, rnb, self.shards[si].row_offset)
                         )
                 if leftover.size:
                     fancy.append((si, f, order[leftover], sidx[leftover]
@@ -359,9 +439,11 @@ class RaDataset:
         return result
 
     @staticmethod
-    def _run_task(run, sidx, order, sample, rshape, dtype, fd, doff, rnb, row_off):
+    def _run_task(run, sidx, order, sample, rshape, dtype, read_raw, rnb, row_off):
         """Closure for one coalesced ranged read (executed on the pool).
-        ``run.sel`` points into the dataset-wide sorted arrays."""
+        ``run.sel`` points into the dataset-wide sorted arrays; ``read_raw``
+        serves a logical payload byte range (positioned pread on a plain
+        shard, chunk decode on a chunked one)."""
 
         def task():
             lo, hi, sel = run
@@ -378,11 +460,11 @@ class RaDataset:
             if direct:
                 # destination rows are contiguous and in order: zero-copy read
                 mv = memoryview(sample.reshape(-1).view(np.uint8)).cast("B")
-                engine.pread_into(fd, doff + lo * rnb, mv[p0 * rnb : p0 * rnb + want])
+                read_raw(lo * rnb, mv[p0 * rnb : p0 * rnb + want])
                 return
             scratch = engine.acquire_scratch(want)
             try:
-                engine.pread_into(fd, doff + lo * rnb, memoryview(scratch)[:want])
+                read_raw(lo * rnb, memoryview(scratch)[:want])
                 rows_arr = scratch[:want].view(dtype).reshape((span,) + rshape)
                 sample[pos_sel] = rows_arr[loc_sel - lo]
             finally:

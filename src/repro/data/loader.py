@@ -224,5 +224,7 @@ class DataLoader:
         io_stats = getattr(self.ds, "io_stats", None)
         if io_stats is not None:
             for k, v in io_stats().items():
-                out[f"remote_cache_{k}"] = float(v)
+                # chunk decode counters (DESIGN.md §10) are not cache stats
+                key = k if k.startswith("chunk_") else f"remote_cache_{k}"
+                out[key] = float(v)
         return out

@@ -34,10 +34,17 @@ import zlib
 
 import numpy as np
 
+from ..core import codec as chunked_codec
 from ..core import engine
 from ..core.header import Header, decode_header
-from ..core.io import is_url
-from ..core.spec import FLAG_CRC32_TRAILER, FLAG_ZLIB, RawArrayError, env_int as _env_int
+from ..core.io import is_url, read_chunked
+from ..core.spec import (
+    FLAG_CHUNKED,
+    FLAG_CRC32_TRAILER,
+    FLAG_ZLIB,
+    RawArrayError,
+    env_int as _env_int,
+)
 from .cache import BlockCache, shared_cache
 
 
@@ -501,8 +508,12 @@ def remote_read(
     reader = get_reader(url)
     head = reader.read_range(0, min(reader.size, 4096))
     hdr = decode_header(head, strict_flags=strict_flags)
-    plain = not (hdr.flags & (FLAG_ZLIB | FLAG_CRC32_TRAILER)) and not hdr.big_endian
-    if plain and not with_metadata:
+    if hdr.flags & FLAG_CHUNKED:
+        # chunk-parallel decode: the table is two small ranged reads, then
+        # every chunk fetch is a ranged GET through the block cache (keyed
+        # on stored byte ranges) + decompress straight into the output
+        return read_chunked(reader, hdr, size=reader.size, with_metadata=with_metadata)
+    if hdr.plain and not with_metadata:
         out = np.empty(hdr.shape, dtype=hdr.dtype())
         if hdr.data_length == 0:
             return out
@@ -556,8 +567,13 @@ def remote_read_into(url: str, out: np.ndarray) -> np.ndarray:
         raise RawArrayError(f"read_into: out.dtype {out.dtype} != file {hdr.dtype()}")
     if not out.flags.c_contiguous:
         raise RawArrayError("read_into: out must be C-contiguous")
-    plain = not (hdr.flags & (FLAG_ZLIB | FLAG_CRC32_TRAILER)) and not hdr.big_endian
-    if plain:
+    if hdr.flags & FLAG_CHUNKED and not hdr.big_endian:
+        if hdr.logical_nbytes:
+            mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
+            table = chunked_codec.read_table(reader, hdr)
+            chunked_codec.decompress_into(reader, hdr, table, mv)
+        return out
+    if hdr.plain:
         if hdr.data_length:
             mv = memoryview(out.reshape(-1).view(np.uint8)).cast("B")
             engine.parallel_read_into(reader, hdr.nbytes, mv)
@@ -567,10 +583,14 @@ def remote_read_into(url: str, out: np.ndarray) -> np.ndarray:
 
 
 def remote_read_metadata(url: str) -> bytes:
-    """Trailing user metadata of a remote file: header + one tail range."""
+    """Trailing user metadata of a remote file: header + one tail range
+    (chunked files skip the trailer chunk table first — one more small
+    ranged read of the table head)."""
     reader = get_reader(url)
     hdr = remote_header_of(url, strict_flags=False)
     start = hdr.nbytes + hdr.data_length
+    if hdr.flags & FLAG_CHUNKED:
+        start += chunked_codec.table_nbytes(reader, hdr)
     tail = reader.read_range(start, max(0, reader.size - start))
     if hdr.flags & FLAG_CRC32_TRAILER:
         tail = tail[:-4]

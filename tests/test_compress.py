@@ -1,0 +1,533 @@
+"""Chunked compression codec (DESIGN.md §10) + trailer/CRC read-path
+bugfixes: property round-trips, boundary geometry, corruption rejection,
+partial reads touching only overlapping chunks, and remote byte-identity."""
+
+import os
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as ra
+from repro.core import codec
+from repro.core.racat import main as racat_main, verify_file
+
+
+def _mkfile(tmp_path, name="x.ra"):
+    return str(tmp_path / name)
+
+
+# ------------------------------------------------------------- wire format
+def test_chunked_layout_and_flags(tmp_path):
+    p = _mkfile(tmp_path)
+    arr = np.arange(5000, dtype=np.float32)
+    ra.write(p, arr, chunked=True, chunk_bytes=4096)
+    hdr = ra.header_of(p)
+    assert hdr.flags & ra.FLAG_CHUNKED
+    assert hdr.data_length < hdr.logical_nbytes  # actually compressed
+    blob = open(p, "rb").read()
+    # chunk table magic sits right after the stored payload
+    base = hdr.nbytes + hdr.data_length
+    assert blob[base : base + 8] == b"rachunks"
+    table = codec.ChunkTable.decode(
+        blob[base:], logical_nbytes=hdr.logical_nbytes, stored_nbytes=hdr.data_length
+    )
+    assert table.nchunks == (hdr.logical_nbytes + 4095) // 4096
+    assert table.chunk_bytes == 4096
+    # stored chunks are packed back-to-back and sum to data_length
+    assert table.stored_nbytes == hdr.data_length
+    # file ends exactly after the table (no metadata, no CRC)
+    assert len(blob) == base + table.nbytes
+
+
+def test_chunked_mutually_exclusive_with_zlib(tmp_path):
+    with pytest.raises(ra.RawArrayError, match="mutually exclusive"):
+        ra.write(_mkfile(tmp_path), np.zeros(4), compress=True, chunked=True)
+
+
+def test_unknown_codec_rejected(tmp_path):
+    with pytest.raises(ra.RawArrayError, match="codec"):
+        ra.write(_mkfile(tmp_path), np.zeros(4), codec="nope")
+
+
+# ------------------------------------------------------------- round trips
+@settings(max_examples=50, deadline=None)
+@given(
+    dtype=st.sampled_from(["uint8", "int16", "float32", "float64", "complex64"]),
+    shape=st.lists(st.integers(0, 9), min_size=0, max_size=3),
+    chunk_bytes=st.sampled_from([4096, 8192, 65536]),
+    codec_name=st.sampled_from(["zlib", "raw"]),
+    crc=st.booleans(),
+    meta=st.binary(max_size=48),
+)
+def test_chunked_roundtrip_property(tmp_path_factory, dtype, shape, chunk_bytes,
+                                    codec_name, crc, meta):
+    d = tmp_path_factory.mktemp("chunkprop")
+    rng = np.random.default_rng(1)
+    n = int(np.prod(shape)) if shape else 1
+    arr = (rng.integers(-40, 40, size=n)).astype(dtype).reshape(shape)
+    p = os.path.join(d, "x.ra")
+    ra.write(p, arr, chunked=True, chunk_bytes=chunk_bytes, codec=codec_name,
+             crc32=crc, metadata=meta or None)
+    back, got_meta = ra.read(p, with_metadata=True)
+    assert back.shape == arr.shape and back.dtype == arr.dtype
+    assert np.array_equal(back, arr)
+    assert got_meta == meta
+    assert ra.read_metadata(p) == meta
+    out = np.empty(arr.shape, arr.dtype)
+    assert np.array_equal(ra.read_into(p, out), arr)
+    assert verify_file(p) == []
+
+
+@pytest.mark.parametrize("nelem,chunk_bytes", [
+    (0, 4096),          # empty payload -> zero chunks
+    (1024, 4096),       # exactly one chunk (boundary == array boundary)
+    (2048, 4096),       # exactly two chunks
+    (2100, 4096),       # last chunk partial
+    (1, 4096),          # single element
+])
+def test_chunked_boundary_geometry(tmp_path, nelem, chunk_bytes):
+    p = _mkfile(tmp_path)
+    arr = np.arange(nelem, dtype=np.float32)
+    ra.write(p, arr, chunked=True, chunk_bytes=chunk_bytes, codec="raw")
+    hdr = ra.header_of(p)
+    with open(p, "rb") as f:
+        table = codec.read_table(f.fileno(), hdr)
+    assert table.nchunks == (arr.nbytes + chunk_bytes - 1) // chunk_bytes
+    assert np.array_equal(ra.read(p), arr)
+
+
+def test_chunked_zero_d_roundtrip(tmp_path):
+    p = _mkfile(tmp_path)
+    ra.write(p, np.float64(2.75), chunked=True)
+    back = ra.read(p)
+    assert back.shape == () and back == 2.75
+
+
+def test_chunked_big_endian_roundtrip(tmp_path):
+    p = _mkfile(tmp_path)
+    arr = np.arange(3000, dtype=np.uint16)
+    ra.write(p, arr, chunked=True, chunk_bytes=4096, big_endian=True)
+    back = ra.read(p)
+    assert back.dtype.byteorder in ("=", "<", "|")
+    assert np.array_equal(back, arr)
+
+
+def test_chunked_refuses_memmap(tmp_path):
+    p = _mkfile(tmp_path)
+    ra.write(p, np.zeros(100, np.float32), chunked=True)
+    with pytest.raises(ra.RawArrayError, match="compress"):
+        ra.memmap(p)
+    with pytest.raises(ra.RawArrayError, match="compress"):
+        ra.memmap_slice(p, 0, 10)
+
+
+# -------------------------------------------------------------- corruption
+def test_corrupt_chunk_crc_rejected(tmp_path):
+    p = _mkfile(tmp_path)
+    arr = np.arange(8192, dtype=np.float32)
+    ra.write(p, arr, chunked=True, chunk_bytes=4096)
+    hdr = ra.header_of(p)
+    blob = bytearray(open(p, "rb").read())
+    blob[hdr.nbytes + 3] ^= 0xFF  # flip one stored byte of chunk 0
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ra.RawArrayError, match="CRC32"):
+        ra.read(p)
+    assert any("CRC32" in m for m in verify_file(p))
+    assert racat_main(["verify", p]) == 1
+
+
+def test_truncated_chunk_table_rejected(tmp_path):
+    p = _mkfile(tmp_path)
+    arr = np.arange(8192, dtype=np.float32)
+    ra.write(p, arr, chunked=True, chunk_bytes=4096)
+    blob = open(p, "rb").read()
+    open(p, "wb").write(blob[:-40])  # chop into the table entries
+    with pytest.raises(ra.RawArrayError, match="[Tt]runcated"):
+        ra.read(p)
+    assert verify_file(p) != []
+
+
+def test_bad_table_magic_rejected(tmp_path):
+    p = _mkfile(tmp_path)
+    ra.write(p, np.arange(512, dtype=np.float32), chunked=True)
+    hdr = ra.header_of(p)
+    blob = bytearray(open(p, "rb").read())
+    base = hdr.nbytes + hdr.data_length
+    blob[base] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ra.RawArrayError, match="magic"):
+        ra.read(p)
+
+
+def test_chunked_strict_flags_for_old_readers(tmp_path):
+    """A reader that doesn't know FLAG_CHUNKED must refuse loudly — the
+    paper's backward-compatible extension contract."""
+    p = _mkfile(tmp_path)
+    ra.write(p, np.zeros(64, np.float32), chunked=True)
+    hdr = ra.header_of(p)
+    assert hdr.flags & ~(ra.FLAG_BIG_ENDIAN | ra.FLAG_CRC32_TRAILER | ra.FLAG_ZLIB)
+
+
+# ---------------------------------------------------- partial-read locality
+def test_sharded_chunked_slice_reads_only_overlapping_chunks(tmp_path):
+    d = str(tmp_path / "sh")
+    arr = np.arange(1000 * 64, dtype=np.float32).reshape(1000, 64)  # 256 KiB/shard
+    ra.write_sharded(d, arr, nshards=1, chunked=True, chunk_bytes=16384)
+    # 16 KiB chunks over 256 KiB rows -> 16 chunks; rows 0..10 live in chunk 0
+    codec.reset_stats()
+    got = ra.read_slice(d, 0, 10)
+    assert np.array_equal(got, arr[:10])
+    s = codec.stats()
+    assert s["chunk_reads"] == 1, s
+    codec.reset_stats()
+    assert np.array_equal(ra.read_sharded(d), arr)
+    assert codec.stats()["chunk_reads"] == 16
+
+
+def test_sharded_chunked_multi_shard_equivalence(tmp_path):
+    d = str(tmp_path / "sh")
+    arr = np.arange(777 * 9, dtype=np.int64).reshape(777, 9)
+    ra.write_sharded(d, arr, nshards=5, chunked=True, chunk_bytes=4096)
+    for lo, hi in [(0, 777), (100, 101), (0, 0), (333, 666)]:
+        assert np.array_equal(ra.read_slice(d, lo, hi), arr[lo:hi])
+    assert np.array_equal(ra.read_slice_naive(d, 50, 700), arr[50:700])
+
+
+def test_dataset_chunked_rows_gather_and_counters(tmp_path):
+    from repro.data.dataset import RaDataset, RaDatasetWriter
+
+    root = str(tmp_path / "ds")
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(400, 32)).astype(np.float32)
+    Y = np.arange(400, dtype=np.int64)
+    w = RaDatasetWriter(root, {"x": ((32,), "float32"), "y": ((), "int64")},
+                        shard_rows=128, chunked=True, chunk_bytes=4096)
+    w.append(x=X, y=Y)
+    w.finish()
+    ds = RaDataset(root)
+    r = ds.rows(33, 301)
+    assert np.array_equal(r["x"], X[33:301])
+    assert np.array_equal(r["y"], Y[33:301])
+    idx = rng.permutation(400)[:96]
+    codec.reset_stats()
+    g = ds.gather(idx)
+    assert np.array_equal(g["x"], X[idx])
+    assert np.array_equal(g["y"], Y[idx])
+    stats = ds.io_stats()
+    assert stats.get("chunk_reads", 0) > 0  # chunk counters observable
+    # out= reuse (the loader's buffer-ring path)
+    out = {"x": np.empty((96, 32), np.float32), "y": np.empty((96,), np.int64)}
+    g2 = ds.gather(idx, out=out)
+    assert g2["x"] is out["x"] and np.array_equal(out["x"], X[idx])
+    ds.close()
+
+
+def test_sharded_chunked_big_endian_slice_correct(tmp_path):
+    """Regression: a big-endian chunked shard must take the decode-and-copy
+    fallback, not stream BE bytes into the native-LE output."""
+    d = str(tmp_path / "sh")
+    arr = np.arange(64, dtype=np.float32).reshape(16, 4)
+    os.makedirs(d)
+    ra.write(os.path.join(d, "shard_00000.ra"), arr, chunked=True,
+             chunk_bytes=4096, big_endian=True)
+    from repro.core.sharded import ShardIndex
+    idx = ShardIndex(shape=(16, 4), dtype="float32", axis=0,
+                     offsets=(0, 16), files=("shard_00000.ra",))
+    open(os.path.join(d, "index.json"), "w").write(idx.to_json())
+    assert np.array_equal(ra.read_slice(d, 3, 9), arr[3:9])
+
+
+def test_gather_decodes_each_chunk_once(tmp_path):
+    """Regression: a scattered gather must decode each overlapping chunk
+    exactly once per field, not once per requested row."""
+    from repro.data.dataset import RaDataset, RaDatasetWriter
+
+    root = str(tmp_path / "ds")
+    X = np.arange(1000 * 4, dtype=np.float32).reshape(1000, 4)  # 16 B rows
+    w = RaDatasetWriter(root, {"x": ((4,), "float32")}, shard_rows=1000,
+                        chunked=True, chunk_bytes=4096)  # 256 rows per chunk
+    w.append(x=X)
+    w.finish()
+    ds = RaDataset(root)
+    idx = np.arange(0, 200, 4)  # 50 sparse rows, all inside chunk 0
+    codec.reset_stats()
+    g = ds.gather(idx)
+    assert np.array_equal(g["x"], X[idx])
+    assert codec.stats()["chunk_reads"] == 1
+    # rows spanning all 4 chunks -> exactly 4 decodes
+    idx = np.array([0, 300, 600, 900, 1, 301, 601, 901])
+    codec.reset_stats()
+    g = ds.gather(idx)
+    assert np.array_equal(g["x"], X[idx])
+    assert codec.stats()["chunk_reads"] == 4
+    ds.close()
+
+
+def test_gather_mixed_chunked_and_plain_fields(tmp_path):
+    """A shard mixing a chunked field file with a plain one plans each
+    field its own way: chunk decodes for one, coalesced runs/mmap
+    leftovers for the other — both byte-correct."""
+    from repro.data.dataset import RaDataset, RaDatasetWriter
+
+    root = str(tmp_path / "ds")
+    X = np.arange(500 * 8, dtype=np.float32).reshape(500, 8)
+    Y = np.arange(500, dtype=np.int64)
+    w = RaDatasetWriter(root, {"x": ((8,), "float32"), "y": ((), "int64")},
+                        shard_rows=500, chunked=True, chunk_bytes=4096)
+    w.append(x=X, y=Y)
+    w.finish()
+    # rewrite field y plain, same filename: a hand-mixed shard
+    ra.write(os.path.join(root, "y_00000.ra"), Y)
+    ds = RaDataset(root)
+    rng = np.random.default_rng(2)
+    idx = rng.permutation(500)[:80]
+    g = ds.gather(idx)
+    assert np.array_equal(g["x"], X[idx])
+    assert np.array_equal(g["y"], Y[idx])
+    r = ds.rows(100, 300)
+    assert np.array_equal(r["x"], X[100:300])
+    assert np.array_equal(r["y"], Y[100:300])
+    ds.close()
+
+
+def test_chunk_bytes_zero_rejected(tmp_path):
+    with pytest.raises(ra.RawArrayError, match="positive"):
+        ra.write(_mkfile(tmp_path), np.zeros(8, np.float32), chunk_bytes=0)
+
+
+def test_gather_rows_straddling_chunk_boundary(tmp_path):
+    """Rows whose byte span crosses a chunk boundary must assemble from
+    both chunks."""
+    from repro.data.dataset import RaDataset, RaDatasetWriter
+
+    root = str(tmp_path / "ds")
+    # 48-byte rows over 4096-byte chunks: 4096/48 is not integral, so many
+    # rows straddle a boundary
+    X = np.arange(600 * 12, dtype=np.float32).reshape(600, 12)
+    w = RaDatasetWriter(root, {"x": ((12,), "float32")}, shard_rows=600,
+                        chunked=True, chunk_bytes=4096)
+    w.append(x=X)
+    w.finish()
+    ds = RaDataset(root)
+    rng = np.random.default_rng(5)
+    idx = rng.permutation(600)[:128]
+    g = ds.gather(idx)
+    assert np.array_equal(g["x"], X[idx])
+    ds.close()
+
+
+def test_loader_over_chunked_dataset(tmp_path):
+    from repro.data.dataset import RaDataset, RaDatasetWriter
+    from repro.data.loader import DataLoader
+
+    root = str(tmp_path / "ds")
+    X = np.arange(300 * 8, dtype=np.float32).reshape(300, 8)
+    w = RaDatasetWriter(root, {"x": ((8,), "float32")}, shard_rows=100,
+                        chunked=True, chunk_bytes=2048)
+    w.append(x=X)
+    w.finish()
+    dl = DataLoader(RaDataset(root), 50, seed=3, reuse_buffers=True)
+    seen = [next(dl)["x"].copy() for _ in range(6)]
+    dl.stop()
+    got = np.sort(np.concatenate(seen).reshape(-1))
+    assert np.array_equal(got, np.sort(X.reshape(-1)))
+    assert "chunk_reads" in dl.stats()
+
+
+def test_checkpoint_chunked_roundtrip(tmp_path):
+    from repro.checkpoint.store import load_checkpoint, save_checkpoint
+
+    params = {
+        "w": np.arange(300 * 40, dtype=np.float32).reshape(300, 40),
+        "b": np.ones(11, np.float32),
+    }
+    ck = save_checkpoint(str(tmp_path / "ck"), 9, params,
+                         chunked=True, chunk_bytes=8192, crc32=True)
+    hdr = ra.header_of(os.path.join(ck, "param__w.ra"))
+    assert hdr.flags & ra.FLAG_CHUNKED
+    p2, _, _ = load_checkpoint(ck, params)
+    assert np.array_equal(p2["w"], params["w"])
+    assert np.array_equal(p2["b"], params["b"])
+
+
+def test_checkpoint_chunked_restore_resharded(tmp_path):
+    """Elastic restore must row-slice a chunked leaf, decoding only the
+    overlapping chunks."""
+    from repro.checkpoint.store import restore_resharded, save_checkpoint
+
+    w = np.arange(2048 * 16, dtype=np.float32).reshape(2048, 16)  # 64 B rows
+    ck = save_checkpoint(str(tmp_path / "ck"), 1, {"w": w},
+                         chunked=True, chunk_bytes=16384)  # 256 rows/chunk
+    codec.reset_stats()
+    got = restore_resharded(ck, "param__w", row_start=100, row_stop=300)
+    assert np.array_equal(got, w[100:300])
+    assert codec.stats()["chunk_reads"] == 2  # rows 100-300 span chunks 0-1
+    assert np.array_equal(
+        restore_resharded(ck, "param__w", row_start=0, row_stop=2048), w
+    )
+
+
+# ------------------------------------------------------------------ remote
+def test_remote_chunked_byte_identical(tmp_path):
+    from repro import remote
+
+    arr = (np.arange(120_000, dtype=np.int64) % 251).astype(np.float32).reshape(120, 1000)
+    p = _mkfile(tmp_path, "c.ra")
+    ra.write(p, arr, chunked=True, chunk_bytes=32768, metadata=b"rm", crc32=True)
+    ra.write_sharded(str(tmp_path / "sh"), arr, nshards=3, chunked=True,
+                     chunk_bytes=16384)
+    server = remote.serve(str(tmp_path), port=0)
+    try:
+        url = server.url + "/c.ra"
+        got, meta = ra.read(url, with_metadata=True)
+        assert got.tobytes() == arr.tobytes() and meta == b"rm"
+        assert ra.read_metadata(url) == b"rm"
+        out = np.empty_like(arr)
+        assert np.array_equal(ra.read_into(url, out), arr)
+        assert np.array_equal(ra.read_slice(server.url + "/sh", 17, 103),
+                              arr[17:103])
+    finally:
+        server.shutdown()
+        server.server_close()
+        remote.close_readers()
+        remote.reset_shared_cache()
+
+
+def test_remote_verify_single_download(tmp_path, monkeypatch):
+    """`racat verify <url>` must fetch the file exactly once — no header
+    fast path + second full payload download."""
+    from repro import remote
+    import repro.core.racat as racat_mod
+
+    p = _mkfile(tmp_path, "v.ra")
+    ra.write(p, np.arange(4096, dtype=np.float32), chunked=True,
+             chunk_bytes=4096, crc32=True)
+    server = remote.serve(str(tmp_path), port=0)
+    try:
+        url = server.url + "/v.ra"
+        calls = []
+        real = remote.fetch_bytes
+
+        def counting(u, **kw):
+            calls.append(u)
+            return real(u, **kw)
+
+        monkeypatch.setattr(remote, "fetch_bytes", counting)
+        monkeypatch.setattr(
+            remote, "get_reader",
+            lambda u: pytest.fail("verify must not open a ranged reader"),
+        )
+        assert racat_mod.main(["verify", url]) == 0
+        assert calls == [url]
+    finally:
+        server.shutdown()
+        server.server_close()
+        remote.close_readers()
+        remote.reset_shared_cache()
+
+
+# ------------------------------------------------- satellite bugfixes
+def test_append_metadata_on_crc32_file(tmp_path):
+    """Regression: appended metadata must land BEFORE the 4-byte CRC
+    trailer, or readers treat the metadata tail as the checksum."""
+    p = _mkfile(tmp_path)
+    arr = np.arange(256, dtype=np.float32)
+    ra.write(p, arr, crc32=True)
+    ra.append_metadata(p, b"abc")
+    ra.append_metadata(p, b"def")
+    back, meta = ra.read(p, with_metadata=True)  # CRC verifies
+    assert np.array_equal(back, arr)
+    assert meta == b"abcdef"
+    assert ra.read_metadata(p) == b"abcdef"
+    assert verify_file(p) == []
+    # corruption is still caught after the splice
+    blob = bytearray(open(p, "rb").read())
+    blob[80] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ra.RawArrayError, match="CRC32"):
+        ra.read(p)
+
+
+@pytest.mark.parametrize("kw", [
+    {"compress": True},
+    {"chunked": True, "chunk_bytes": 4096},
+])
+def test_append_metadata_on_crc32_compressed_file(tmp_path, kw):
+    p = _mkfile(tmp_path)
+    arr = np.tile(np.arange(97, dtype=np.float64), 13)
+    ra.write(p, arr, crc32=True, metadata=b"m0", **kw)
+    ra.append_metadata(p, b"+m1")
+    back, meta = ra.read(p, with_metadata=True)
+    assert np.array_equal(back, arr)
+    assert meta == b"m0+m1"
+    assert verify_file(p) == []
+
+
+def test_read_into_zlib_honors_out(tmp_path):
+    """Regression: read_into on a FLAG_ZLIB file must fill the caller's
+    buffer (streamed decompressobj, no silent fallback) byte-identically."""
+    p = _mkfile(tmp_path)
+    arr = np.arange(300_000, dtype=np.float32).reshape(600, 500)
+    for kw in [{}, {"crc32": True}]:
+        ra.write(p, arr, compress=True, **kw)
+        out = np.full_like(arr, -1)
+        got = ra.read_into(p, out)
+        assert got is out
+        assert out.tobytes() == ra.read(p).tobytes()
+    # corrupted compressed payload fails the CRC through read_into too
+    blob = bytearray(open(p, "rb").read())
+    blob[ra.header_of(p).nbytes + 7] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises((ra.RawArrayError, zlib.error)):
+        ra.read_into(p, np.empty_like(arr))
+
+
+def test_read_into_zlib_shape_mismatch_raises(tmp_path):
+    p = _mkfile(tmp_path)
+    ra.write(p, np.zeros((4, 4), np.float32), compress=True)
+    with pytest.raises(ra.RawArrayError, match="out.shape"):
+        ra.read_into(p, np.empty((4, 5), np.float32))
+
+
+# ----------------------------------------------------------------- racat
+def test_racat_compress_and_inspect(tmp_path, capsys):
+    p = _mkfile(tmp_path)
+    q = _mkfile(tmp_path, "y.ra")
+    arr = np.tile(np.arange(500, dtype=np.float32), 40)
+    ra.write(p, arr, metadata=b"keepme")
+    assert racat_main(["compress", p, q, "--chunk-bytes", "8192", "--crc32"]) == 0
+    assert np.array_equal(ra.read(q), arr)
+    assert ra.read_metadata(q) == b"keepme"
+    assert racat_main(["inspect", q]) == 0
+    out = capsys.readouterr().out
+    assert "rachunks" not in out and "nchunks" in out and "zlib" in out
+    assert racat_main(["verify", q]) == 0
+
+
+def test_codec_registry_roundtrip_all_available(tmp_path):
+    rng = np.random.default_rng(0)
+    arr = rng.integers(0, 50, size=5000).astype(np.int32)
+    for name in ["raw", "zlib"] + (["lzma"] if 4 in codec._by_id else []):
+        p = _mkfile(tmp_path, f"{name}.ra")
+        ra.write(p, arr, chunked=True, codec=name, chunk_bytes=4096)
+        hdr = ra.header_of(p)
+        with open(p, "rb") as f:
+            t = codec.read_table(f.fileno(), hdr)
+        assert codec.get_codec(t.codec_id).name == name
+        assert np.array_equal(ra.read(p), arr)
+
+
+def test_env_knobs(tmp_path, monkeypatch):
+    monkeypatch.setenv("RA_CHUNK_BYTES", "4096")
+    monkeypatch.setenv("RA_CODEC", "raw")
+    p = _mkfile(tmp_path)
+    arr = np.arange(3000, dtype=np.float32)
+    ra.write(p, arr, chunked=True)
+    hdr = ra.header_of(p)
+    with open(p, "rb") as f:
+        t = codec.read_table(f.fileno(), hdr)
+    assert t.chunk_bytes == 4096
+    assert codec.get_codec(t.codec_id).name == "raw"
+    assert np.array_equal(ra.read(p), arr)
