@@ -1,0 +1,189 @@
+"""Streaming ingest benchmark (DESIGN.md §11) — streamed vs. monolithic
+write throughput, local and loopback-remote.
+
+Modes measured (same array everywhere, byte-compared after every streamed
+variant — the run FAILS LOUDLY on any mismatch, so this doubles as the CI
+ingest smoke):
+
+  local_monolithic        one ``ra.write`` of the in-RAM array (baseline)
+  local_streamed          ``RaWriter`` fed in row batches (the array never
+                          needs to exist in RAM; measured feeding slices)
+  local_monolithic_zlib   one chunk-compressed ``ra.write``
+  local_streamed_zlib     ``RaWriter(chunked=True)``: compression runs
+                          chunk-parallel WHILE batches arrive
+  sharded_streamed        ``ShardedWriter`` auto-rolling shards
+  remote_put              whole-object authenticated PUT (``ra.write`` to a
+                          URL, loopback server)
+  remote_streamed         ``RemoteWriter`` appends over keep-alive PUTs
+
+Writes ``BENCH_INGEST.json`` at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_ingest.py [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+import repro.core as ra
+from repro import remote
+
+MIB = 1 << 20
+SCALES = {"paper": 256 * MIB, "quick": 64 * MIB}
+BATCH_ROWS = 4096  # ingest-shaped: ~1 MiB batches of 64-float rows
+TOKEN = "bench-ingest-token"
+
+
+def _row(mode: str, seconds: float, nbytes: int, **extra) -> Dict:
+    return {
+        "bench": "ingest",
+        "mode": mode,
+        "seconds": round(seconds, 4),
+        "gbps": round(nbytes / seconds / 1e9, 3),
+        **extra,
+    }
+
+
+def _best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _stream(writer_factory, arr) -> None:
+    with writer_factory() as w:
+        for lo in range(0, arr.shape[0], BATCH_ROWS):
+            w.write_rows(arr[lo : lo + BATCH_ROWS])
+
+
+def _identical(a: str, b: str) -> None:
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        if fa.read() != fb.read():
+            raise AssertionError(f"BYTE MISMATCH: {a} != {b}")
+
+
+def bench_ingest(full: bool = False) -> List[Dict]:
+    payload = SCALES["paper" if full else "quick"]
+    rows_n = payload // (64 * 4)
+    reps = 2 if full else 3
+    d = tempfile.mkdtemp(prefix="ra_bench_ingest_")
+    server = None
+    rows: List[Dict] = []
+    try:
+        rng = np.random.default_rng(0)
+        arr = rng.integers(0, 1 << 30, size=(rows_n, 64), dtype=np.uint32).view(np.float32)
+        nbytes = arr.nbytes
+        mono, streamed = os.path.join(d, "mono.ra"), os.path.join(d, "stream.ra")
+
+        t = _best(lambda: ra.write(mono, arr), reps)
+        rows.append(_row("local_monolithic", t, nbytes, mib=nbytes // MIB))
+
+        t = _best(
+            lambda: _stream(lambda: ra.RaWriter(streamed, arr.dtype, (64,)), arr), reps
+        )
+        _identical(mono, streamed)
+        rows.append(_row("local_streamed", t, nbytes, batch_rows=BATCH_ROWS))
+
+        mono_z, stream_z = os.path.join(d, "mono_z.ra"), os.path.join(d, "stream_z.ra")
+        t = _best(lambda: ra.write(mono_z, arr, chunked=True, codec="zlib"), reps)
+        stored = ra.header_of(mono_z).data_length
+        rows.append(_row("local_monolithic_zlib", t, nbytes,
+                         ratio=round(stored / nbytes, 3)))
+
+        t = _best(
+            lambda: _stream(
+                lambda: ra.RaWriter(stream_z, arr.dtype, (64,), chunked=True, codec="zlib"),
+                arr,
+            ),
+            reps,
+        )
+        _identical(mono_z, stream_z)
+        rows.append(_row("local_streamed_zlib", t, nbytes, batch_rows=BATCH_ROWS))
+
+        sharded = os.path.join(d, "sharded")
+        shard_bytes = max(1, nbytes // 8)
+
+        def _do_sharded():
+            shutil.rmtree(sharded, ignore_errors=True)
+            _stream(
+                lambda: ra.ShardedWriter(sharded, arr.dtype, (64,), shard_bytes=shard_bytes),
+                arr,
+            )
+
+        t = _best(_do_sharded, reps)
+        if not np.array_equal(ra.read_sharded(sharded), arr):
+            raise AssertionError("sharded streamed write does not round-trip")
+        rows.append(_row("sharded_streamed", t, nbytes,
+                         nshards=len(ra.load_index(sharded).files)))
+
+        # ---- loopback remote ------------------------------------------------
+        sroot = os.path.join(d, "served")
+        os.makedirs(sroot, exist_ok=True)
+        server = remote.serve(sroot, upload_token=TOKEN)
+        url = server.url
+
+        os.environ["RA_REMOTE_TOKEN"] = TOKEN  # ra.write(URL) reads the knob
+        t = _best(lambda: ra.write(f"{url}/put.ra", arr), reps)
+        _identical(mono, os.path.join(sroot, "put.ra"))
+        rows.append(_row("remote_put", t, nbytes, loopback=True))
+
+        t = _best(
+            lambda: _stream(
+                lambda: remote.RemoteWriter(f"{url}/stream.ra", arr.dtype, (64,), token=TOKEN),
+                arr,
+            ),
+            reps,
+        )
+        _identical(mono, os.path.join(sroot, "stream.ra"))
+        rows.append(_row("remote_streamed", t, nbytes, batch_rows=BATCH_ROWS))
+
+        mono_t = next(r["seconds"] for r in rows if r["mode"] == "local_monolithic")
+        stream_t = next(r["seconds"] for r in rows if r["mode"] == "local_streamed")
+        rows.append({
+            "bench": "ingest",
+            "mode": "summary",
+            "payload_mib": nbytes // MIB,
+            "streamed_over_monolithic": round(mono_t / stream_t, 3),
+            "byte_identical": True,
+        })
+        return rows
+    finally:
+        if server is not None:
+            server.shutdown()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def write_bench_ingest(rows: List[Dict]) -> str:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = os.path.join(repo, "BENCH_INGEST.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return out
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args(argv)
+    rows = bench_ingest(full=args.full)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"# wrote {write_bench_ingest(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|remote|compress|formats|images|pipeline|checkpoint|roofline")
+                   help="engine|remote|compress|ingest|formats|images|pipeline|checkpoint|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -39,6 +39,7 @@ def main(argv=None) -> None:
     from benchmarks.bench_compress import bench_compress, write_bench_compress
     from benchmarks.bench_formats import bench_engine, bench_formats, derive_speedups, write_bench_io
     from benchmarks.bench_images import bench_images
+    from benchmarks.bench_ingest import bench_ingest, write_bench_ingest
     from benchmarks.bench_pipeline import bench_checkpoint, bench_pipeline
     from benchmarks.bench_remote import bench_remote, write_bench_remote
 
@@ -46,8 +47,8 @@ def main(argv=None) -> None:
     wanted = (
         args.only.split(",")
         if args.only
-        else ["engine", "remote", "compress", "formats", "images", "pipeline",
-              "checkpoint", "roofline"]
+        else ["engine", "remote", "compress", "ingest", "formats", "images",
+              "pipeline", "checkpoint", "roofline"]
     )
 
     if "engine" in wanted:
@@ -65,6 +66,11 @@ def main(argv=None) -> None:
         _print_rows(rows)
         all_rows += rows
         print(f"# wrote {write_bench_compress(rows)}")
+    if "ingest" in wanted:
+        rows = bench_ingest(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_ingest(rows)}")
     if "formats" in wanted:
         rows = bench_formats(full=args.full)
         rows += derive_speedups(rows)

@@ -61,6 +61,29 @@ def main() -> None:
     sl = ra.read_slice(os.path.join(d, "sharded"), 250, 750)
     print("sharded elastic read equal:", np.array_equal(sl, big[250:750]))
 
+    # --- chunked compression (DESIGN.md §10) ----------------------------------
+    ramp = np.arange(1000 * 256, dtype=np.float32).reshape(1000, 256)
+    cpath = os.path.join(d, "compressed.ra")
+    ra.write(cpath, ramp, chunked=True, codec="zlib")
+    chdr = ra.header_of(cpath)
+    print(f"chunked zlib: {chdr.logical_nbytes} -> {chdr.data_length} stored bytes; "
+          f"roundtrip equal: {np.array_equal(ra.read(cpath), ramp)}")
+
+    # --- streaming ingest (DESIGN.md §11) -------------------------------------
+    spath = os.path.join(d, "streamed.ra")
+    with ra.RaWriter(spath, np.float32, (256,)) as w:  # leading dim unknown
+        for lo in range(0, 1000, 100):
+            w.write_rows(big[lo : lo + 100])
+    print("streamed write equal:", np.array_equal(ra.read(spath), big))
+
+    # --- serve + remote read (DESIGN.md §9) -----------------------------------
+    from repro import remote
+
+    server = remote.serve(d)  # in-process loopback byte-range server
+    rarr = ra.read(f"{server.url}/big.ra")
+    print("remote read equal:", np.array_equal(rarr, big))
+    server.shutdown()
+
 
 if __name__ == "__main__":
     main()

@@ -26,7 +26,12 @@ Design properties (DESIGN.md §2):
   ``restore_resharded`` accept an ``http(s)://`` checkpoint-directory URL —
   a fresh host cold-starts a model straight from a byte-range server, the
   manifest over HTTP and every leaf streamed by the same one-wave engine
-  plan as local restore (saves remain local-only).
+  plan as local restore;
+* **remote save** (DESIGN.md §11): ``save_checkpoint`` (and the manager)
+  also accept a checkpoint-directory URL — each leaf is one authenticated
+  atomic PUT and the manifest uploads last, so a remote checkpoint becomes
+  visible only once complete (checkpoint-to-object-store without touching
+  local disk).
 """
 
 from __future__ import annotations
@@ -99,14 +104,24 @@ def save_checkpoint(
     leaves compress concurrently on the shared engine pool (within one leaf
     the chunks compress serially — the leaf writes already occupy the pool;
     a single-leaf save chunk-parallelizes instead), and restore folds every
-    leaf's chunk decodes into the one restore wave."""
-    if ra.is_url(directory):
-        raise ra.RawArrayError("checkpoint saves are local-only; restore takes URLs")
-    final = os.path.join(directory, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp, exist_ok=True)
+    leaf's chunk decodes into the one restore wave.
+
+    ``directory`` may be an ``http(s)://`` URL of a write-enabled byte-range
+    server (DESIGN.md §11): every leaf ships as one authenticated PUT with
+    server-side atomic publish (engine-pool-parallel across leaves, token
+    knob ``RA_REMOTE_TOKEN``), and the manifest is uploaded LAST — readers
+    resolve a checkpoint through its manifest, so the checkpoint does not
+    exist remotely until the final PUT lands (the remote twin of the local
+    temp-dir + rename publish)."""
+    remote_save = ra.is_url(directory)
+    final = _join(directory, f"step_{step:08d}")
+    if remote_save:
+        tmp = final  # leaf PUTs are individually atomic; manifest-last publishes
+    else:
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
 
     leaves: Dict[str, np.ndarray] = {}
     leaves.update(_flatten(params, "param"))
@@ -126,7 +141,7 @@ def save_checkpoint(
     for name, leaf in leaves.items():
         arr = _leaf_to_numpy(leaf)
         fname = name + ".ra"
-        fpath = os.path.join(tmp, fname)
+        fpath = _join(tmp, fname)
         write_tasks.append(
             lambda p=fpath, a=arr: ra.write(
                 p, a, crc32=crc32,
@@ -139,8 +154,14 @@ def save_checkpoint(
             "dtype": str(arr.dtype) if arr.dtype.names is None else "void",
         }
     ra.engine.run_tasks(write_tasks)
-    with open(os.path.join(tmp, MANIFEST), "w") as f:
-        json.dump(manifest, f, indent=1)
+    body = json.dumps(manifest, indent=1).encode()
+    if remote_save:
+        from .. import remote
+
+        remote.upload_bytes(_join(final, MANIFEST), body)  # publish: manifest LAST
+        return final
+    with open(os.path.join(tmp, MANIFEST), "wb") as f:
+        f.write(body)
         f.flush()
         os.fsync(f.fileno())
     if os.path.exists(final):
@@ -348,7 +369,8 @@ class CheckpointManager:
         self.chunk_bytes = chunk_bytes
         self._thread: Optional[threading.Thread] = None
         self.save_s = 0.0
-        os.makedirs(directory, exist_ok=True)
+        if not ra.is_url(directory):
+            os.makedirs(directory, exist_ok=True)
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -379,6 +401,8 @@ class CheckpointManager:
             run()
 
     def _gc(self) -> None:
+        if ra.is_url(self.directory):
+            return  # remote stores garbage-collect server-side, not from here
         steps = sorted(
             int(d[5:])
             for d in os.listdir(self.directory)

@@ -12,6 +12,7 @@ from . import codec
 from . import engine
 from .header import Header, decode_header, read_header
 from .io import (
+    RaWriter,
     append_metadata,
     header_of,
     is_url,
@@ -26,6 +27,7 @@ from .io import (
     write_like,
 )
 from .sharded import (
+    ShardedWriter,
     ShardIndex,
     load_index,
     read_sharded,
@@ -58,6 +60,8 @@ __all__ = [
     "read",
     "read_into",
     "write",
+    "RaWriter",
+    "ShardedWriter",
     "memmap",
     "memmap_slice",
     "read_metadata",

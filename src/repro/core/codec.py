@@ -327,6 +327,115 @@ def compress_chunked(
     return [p for p in parts], table
 
 
+class ChunkStreamCompressor:
+    """Incremental chunk compression for the streaming write plane
+    (DESIGN.md §11).
+
+    ``RaWriter`` feeds raw payload bytes in arbitrary-sized pieces; every
+    complete ``chunk_bytes`` window is compressed (one parallel engine wave
+    per feed) and handed back as stored parts to append, so compression
+    overlaps ingest instead of waiting for the full array. Chunk boundaries
+    fall at absolute multiples of ``chunk_bytes`` of the logical payload —
+    exactly where ``compress_chunked`` puts them — which is what makes a
+    streamed file byte-identical to a monolithic ``io.write``.
+    """
+
+    def __init__(
+        self,
+        codec: Union[int, str, None] = None,
+        chunk_bytes: Optional[int] = None,
+    ):
+        self._codec = get_codec(codec)
+        self._cbytes = default_chunk_bytes() if chunk_bytes is None else int(chunk_bytes)
+        if self._cbytes < 1:
+            raise RawArrayError(f"chunk_bytes must be positive, got {self._cbytes}")
+        self._buf = bytearray()
+        self._raw_offs: List[int] = []
+        self._lens: List[int] = []
+        self._crcs: List[int] = []
+        self._raw_consumed = 0  # raw bytes already turned into stored chunks
+
+    @property
+    def codec_id(self) -> int:
+        return self._codec.codec_id
+
+    def _compress(self, mv: memoryview) -> List[bytes]:
+        """Compress ``mv`` chunk-parallel (chunk boundaries at multiples of
+        ``chunk_bytes`` within ``mv``; callers guarantee ``mv`` itself starts
+        on a chunk boundary of the logical payload)."""
+        cb = self._cbytes
+        n = (mv.nbytes + cb - 1) // cb
+        out: List[Optional[bytes]] = [None] * n
+        c = self._codec
+
+        def job(i: int) -> None:
+            a = i * cb
+            b = min(a + cb, mv.nbytes)
+            p = c.compress(mv[a:b])
+            # the store codec returns a view into our (mutable, soon-recycled)
+            # staging buffer — detach it
+            out[i] = p if isinstance(p, bytes) else bytes(p)
+
+        engine.run_tasks([(lambda i=i: job(i)) for i in range(n)])
+        for i, p in enumerate(out):
+            self._raw_offs.append(self._raw_consumed)
+            self._raw_consumed += min(cb, mv.nbytes - i * cb)
+            self._lens.append(len(p))
+            self._crcs.append(zlib.crc32(p))
+        return out  # type: ignore[return-value]
+
+    def feed(self, data) -> List[bytes]:
+        """Consume a piece of raw payload; returns the stored parts of every
+        chunk completed by it (append them to the file in order)."""
+        mv = data if isinstance(data, memoryview) else memoryview(data)
+        if mv.format != "B" or mv.ndim != 1:
+            mv = mv.cast("B")
+        parts: List[bytes] = []
+        cb = self._cbytes
+        if not self._buf and mv.nbytes >= cb:
+            # fast path: full chunks compress straight out of the caller's
+            # buffer, no staging copy
+            nfull = (mv.nbytes // cb) * cb
+            parts += self._compress(mv[:nfull])
+            mv = mv[nfull:]
+        if mv.nbytes:
+            self._buf += mv
+            if len(self._buf) >= cb:
+                nfull = (len(self._buf) // cb) * cb
+                staged = memoryview(self._buf)[:nfull]
+                parts += self._compress(staged)
+                staged.release()
+                del self._buf[:nfull]
+        return parts
+
+    def flush(self) -> List[bytes]:
+        """Compress the final short chunk (if any buffered bytes remain)."""
+        if not self._buf:
+            return []
+        staged = memoryview(self._buf)
+        parts = self._compress(staged)
+        staged.release()
+        self._buf = bytearray()
+        return parts
+
+    def table(self) -> ChunkTable:
+        """The trailer chunk table for everything fed so far (call after
+        ``flush``)."""
+        n = len(self._lens)
+        lens = np.array(self._lens, dtype="<u8")
+        stored = np.zeros(n, dtype="<u8")
+        if n:
+            stored[1:] = np.cumsum(lens)[:-1]
+        return ChunkTable(
+            codec_id=self._codec.codec_id,
+            chunk_bytes=self._cbytes,
+            raw_offsets=np.array(self._raw_offs, dtype="<u8"),
+            stored_offsets=stored,
+            stored_lens=lens,
+            crcs=np.array(self._crcs, dtype="<u8"),
+        )
+
+
 # ------------------------------------------------------------------- decode
 def _src_size(src) -> Optional[int]:
     """Total byte size of a positioned-read source when cheaply knowable

@@ -1,4 +1,5 @@
-"""Mapping between numpy dtypes and RawArray (eltype, elbyte) pairs.
+"""Mapping between numpy dtypes and RawArray (eltype, elbyte) pairs
+(DESIGN.md §1).
 
 The paper's key type-system idea: *kind* and *width* are independent, so new
 widths (f16, f128, 512-bit AVX lanes) need no format change. We register the

@@ -1,4 +1,4 @@
-"""RawArray header encode/decode (paper §2, Table 1)."""
+"""RawArray header encode/decode (paper §2, Table 1; DESIGN.md §1)."""
 
 from __future__ import annotations
 

@@ -19,14 +19,22 @@ copies.
 Every read-side entry point also accepts ``http(s)://`` URLs and dispatches
 to the remote data plane (``repro.remote``, DESIGN.md §9): the same header
 decode and engine-planned slab reads, issued as parallel byte-range
-requests. Write-side and mmap entry points are local-only and refuse URLs.
+requests.
+
+The streaming ingest plane (DESIGN.md §11): ``RaWriter`` writes a file
+incrementally — unknown leading dimension, row batches, chunk-parallel
+compression as batches arrive, crash-safe temp-file + rename publish.
+``write`` also accepts an ``http(s)://`` destination (one authenticated
+PUT, server-side atomic publish); ``repro.remote.RemoteWriter`` is the
+streaming equivalent. ``memmap``/``memmap_slice``/``append_metadata``
+remain local-only and refuse URLs.
 """
 
 from __future__ import annotations
 
 import os
 import zlib
-from typing import Any, Optional, Tuple, Union
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -109,8 +117,13 @@ def write(
     (``FLAG_CHUNKED``, DESIGN.md §10): compression runs chunk-parallel on
     the engine pool here, and every read path decodes only the chunks it
     needs. Defaults: codec ``RA_CODEC`` (zlib), chunk size ``RA_CHUNK_BYTES``
-    (1 MiB)."""
-    _reject_url(path, "write")
+    (1 MiB).
+
+    ``path`` may be an ``http(s)://`` URL of a write-enabled byte-range
+    server (DESIGN.md §11): the identical bytes are shipped as ONE
+    authenticated PUT with server-side atomic publish (token knob
+    ``RA_REMOTE_TOKEN``). Incremental / unknown-length writes go through
+    ``RaWriter`` (local) or ``repro.remote.RemoteWriter`` (URL) instead."""
     chunked = chunked or codec is not None or chunk_bytes is not None
     if compress and chunked:
         raise RawArrayError(
@@ -155,6 +168,8 @@ def write(
             crc = zlib.crc32(v, crc)
         views.append(memoryview(crc.to_bytes(4, "little")))
     total = sum(v.nbytes for v in views)
+    if is_url(path):
+        return _remote().upload_bytes(path, views)
     with open(os.fspath(path), "wb") as f:
         if total < _SMALL:
             buf = bytearray()
@@ -164,6 +179,270 @@ def write(
             return total
         os.ftruncate(f.fileno(), total)  # preallocate, then go wide (DESIGN.md §8)
         return engine.parallel_write(f.fileno(), 0, views)
+
+
+class _FileSink:
+    """Crash-safe local byte sink for ``RaWriter`` (DESIGN.md §11).
+
+    Every byte lands in a hidden same-directory temp file; ``commit`` fsyncs
+    and atomically renames it into place, so a crash at ANY point of a
+    streamed write leaves no partial file visible under the final name.
+    ``patch`` rewrites earlier bytes (the finalize header patch); ``abort``
+    removes the temp file.
+    """
+
+    def __init__(self, path: PathLike):
+        self.path = os.fspath(path)
+        _reject_url(self.path, "RaWriter")  # URLs go through remote.RemoteWriter
+        self._dir = os.path.dirname(self.path) or "."
+        base = os.path.basename(self.path)
+        self.tmp = os.path.join(
+            self._dir, f".{base}.tmp-{os.getpid()}-{id(self) & 0xFFFF:04x}"
+        )
+        self.fd = os.open(self.tmp, os.O_RDWR | os.O_CREAT | os.O_TRUNC, 0o666)
+        self.size = 0
+
+    def append(self, views: Sequence[object]) -> int:
+        total = 0
+        for v in views:
+            mv = v if isinstance(v, memoryview) else memoryview(v)
+            total += mv.nbytes
+        if total >= engine.parallel_min():
+            # preallocate the extension, then go slab-parallel (DESIGN.md §8)
+            os.ftruncate(self.fd, self.size + total)
+            engine.parallel_write(self.fd, self.size, views)
+        else:
+            pos = self.size
+            for v in views:
+                pos += engine.pwrite_from(self.fd, pos, v)
+        self.size += total
+        return total
+
+    def patch(self, offset: int, data) -> None:
+        engine.pwrite_from(self.fd, offset, data)
+
+    def commit(self) -> None:
+        os.fsync(self.fd)
+        os.close(self.fd)
+        self.fd = -1
+        os.replace(self.tmp, self.path)
+        try:  # make the rename itself durable (same contract as checkpoints)
+            dfd = os.open(self._dir, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass  # directory fsync is best-effort (e.g. some network FS)
+
+    def abort(self) -> None:
+        if self.fd >= 0:
+            os.close(self.fd)
+            self.fd = -1
+        try:
+            os.unlink(self.tmp)
+        except OSError:
+            pass
+
+
+# Plain-payload writes buffer small row batches and flush in slabs of this
+# many bytes, so a row-at-a-time ingest still writes in large sequential I/O.
+_WRITER_BUF = 4 << 20
+
+
+class RaWriter:
+    """Incremental RawArray writer: the streaming ingest plane (DESIGN.md §11).
+
+    Opens with an UNKNOWN leading dimension, accepts row batches of shape
+    ``(n, *row_shape)`` via ``write_rows``, and on ``finalize`` patches
+    ``dims[0]`` / ``data_length`` into the header, emits the chunk table
+    (chunked mode), optional user metadata and optional CRC32 trailer, then
+    atomically publishes the file (write-to-temp + rename) — a crash mid-
+    stream leaves no partial file visible.
+
+    The output is byte-identical to a monolithic ``write()`` of the same
+    array for every supported flag combination: plain, ``crc32=True``, and
+    ``chunked=True`` with any registered codec (chunk compression runs
+    chunk-parallel on the engine pool AS BATCHES ARRIVE, so compression
+    overlaps ingest). Whole-file zlib (``compress=``) is not streamable —
+    use ``chunked`` (DESIGN.md §10).
+
+    ``sink`` is the byte-sink escape hatch the remote plane plugs into
+    (``repro.remote.RemoteWriter`` streams the same bytes as authenticated
+    PUT appends); local callers never pass it.
+
+    Usage::
+
+        with RaWriter("out.ra", np.float32, (256,), chunked=True) as w:
+            for batch in batches:          # (n, 256) float32 each
+                w.write_rows(batch)
+        # or explicitly: hdr = w.finalize(metadata=b"...")
+    """
+
+    def __init__(
+        self,
+        path: PathLike,
+        dtype,
+        row_shape: Tuple[int, ...] = (),
+        *,
+        crc32: bool = False,
+        chunked: bool = False,
+        codec: Optional[str] = None,
+        chunk_bytes: Optional[int] = None,
+        metadata: Optional[bytes] = None,
+        sink=None,
+    ):
+        chunked = chunked or codec is not None or chunk_bytes is not None
+        dt = np.dtype(dtype)
+        if dt.byteorder == ">":
+            raise RawArrayError("RaWriter writes little-endian files only")
+        self._dtype = dt
+        self._row_shape = tuple(int(d) for d in row_shape)
+        self._row_nbytes = dt.itemsize
+        for d in self._row_shape:
+            self._row_nbytes *= d
+        self._flags = 0
+        if crc32:
+            self._flags |= FLAG_CRC32_TRAILER
+        if chunked:
+            self._flags |= FLAG_CHUNKED
+        self._crc32 = crc32
+        self._metadata = metadata
+        # prototype header (dims[0]=0, data_length=0): placeholder bytes now,
+        # patched with the real values at finalize — the header size is fixed
+        # because ndims is known up front
+        proto = np.empty((0,) + self._row_shape, dtype=dt)
+        self._hdr0 = Header.for_array(proto, flags=self._flags, data_length=0)
+        self._compressor = (
+            chunked_codec.ChunkStreamCompressor(codec=codec, chunk_bytes=chunk_bytes)
+            if chunked
+            else None
+        )
+        self._buf = bytearray()  # plain mode: pending raw bytes, flushed in slabs
+        self._rows = 0
+        self._payload_nbytes = 0  # stored bytes appended so far
+        self._crc = 0
+        self._state = "open"
+        self._sink = _FileSink(path) if sink is None else sink
+        self._sink.append([memoryview(self._hdr0.encode())])
+
+    # ---- introspection -----------------------------------------------------
+    @property
+    def rows(self) -> int:
+        """Rows written so far (the eventual ``dims[0]``)."""
+        return self._rows
+
+    @property
+    def stored_nbytes(self) -> int:
+        """Stored payload bytes appended to the sink so far (compressed size
+        in chunked mode; excludes buffered not-yet-flushed bytes)."""
+        return self._payload_nbytes
+
+    # ---- write path --------------------------------------------------------
+    def _append_payload(self, view) -> None:
+        """Append stored payload bytes, folding them into the file-level CRC
+        (which covers the STORED data segment, exactly like ``write()``)."""
+        if self._crc32:
+            self._crc = zlib.crc32(view, self._crc)
+        self._sink.append([view])
+        mv = view if isinstance(view, memoryview) else memoryview(view)
+        self._payload_nbytes += mv.nbytes
+
+    def write_rows(self, rows) -> int:
+        """Append a batch shaped ``(n, *row_shape)``; returns total rows so
+        far. Rows are cast to the writer's dtype (same semantics as the
+        dataset writer) and must be batched — a single row is ``rows[None]``."""
+        if self._state != "open":
+            raise RawArrayError(f"write_rows on a {self._state} RaWriter")
+        a = np.asarray(rows)
+        if a.shape[1:] != self._row_shape:
+            raise RawArrayError(
+                f"write_rows: batch row shape {a.shape[1:]} != writer row "
+                f"shape {self._row_shape}"
+            )
+        a = np.ascontiguousarray(a.astype(self._dtype, copy=False))
+        n = a.shape[0]
+        if n == 0 or self._row_nbytes == 0:
+            self._rows += n
+            return self._rows
+        view = _as_bytes_view(a)
+        if self._compressor is not None:
+            for part in self._compressor.feed(view):
+                self._append_payload(part)
+        elif view.nbytes >= _WRITER_BUF:
+            # large batch: flush any buffered tail, then write the caller's
+            # bytes straight through — never stage a big batch in the buffer
+            if self._buf:
+                self._append_payload(memoryview(self._buf))
+                self._buf = bytearray()
+            self._append_payload(view)
+        else:
+            self._buf += view
+            if len(self._buf) >= _WRITER_BUF:
+                self._append_payload(memoryview(self._buf))
+                self._buf = bytearray()
+        self._rows += n
+        return self._rows
+
+    # ---- lifecycle ---------------------------------------------------------
+    def finalize(self, metadata: Optional[bytes] = None) -> Header:
+        """Flush everything, emit trailers, patch the header, publish.
+
+        Order (DESIGN.md §11): final short chunk → chunk table → metadata →
+        CRC trailer → header patch (``dims[0]``, ``data_length``) → durable
+        commit (fsync + atomic rename). Returns the final ``Header``.
+        Calling it twice — or after ``abort`` — raises."""
+        if self._state != "open":
+            raise RawArrayError(f"finalize on a {self._state} RaWriter")
+        meta = self._metadata if metadata is None else metadata
+        if self._buf:
+            self._append_payload(memoryview(self._buf))
+            self._buf = bytearray()
+        tail: List[memoryview] = []
+        if self._compressor is not None:
+            for part in self._compressor.flush():
+                self._append_payload(part)
+            tail.append(memoryview(self._compressor.table().encode()))
+        if meta:
+            tail.append(memoryview(meta))
+        if self._crc32:
+            tail.append(memoryview(self._crc.to_bytes(4, "little")))
+        if tail:
+            self._sink.append(tail)
+        hdr = Header(
+            flags=self._flags,
+            eltype=self._hdr0.eltype,
+            elbyte=self._hdr0.elbyte,
+            data_length=self._payload_nbytes,
+            shape=(self._rows,) + self._row_shape,
+        )
+        self._sink.patch(0, memoryview(hdr.encode()))
+        self._sink.commit()
+        self._state = "finalized"
+        return hdr
+
+    def abort(self) -> None:
+        """Drop the in-progress write: the temp file (or remote ``.part``)
+        is deleted and the final path is never touched. Idempotent; a
+        finalized writer cannot be aborted."""
+        if self._state == "open":
+            self._state = "aborted"
+            self._sink.abort()
+
+    def __enter__(self) -> "RaWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abort()
+        elif self._state == "open":
+            self.finalize()
+
+    def __del__(self):  # a dropped writer must not leak its fd / temp file
+        try:
+            self.abort()
+        except Exception:
+            pass
 
 
 def read(

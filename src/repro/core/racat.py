@@ -18,14 +18,21 @@ ONCE and reuses that payload for every recheck (header, CRC, zlib, chunk
 table) — never a header fast-path fetch plus a second full download.
 ``compress`` rewrites any RawArray file (local or URL source) as a
 chunk-compressed one (DESIGN.md §10), preserving user metadata.
+``ingest`` stream-concatenates ``.npy`` / ``.ra`` sources into one RawArray
+file through the incremental writer (DESIGN.md §11) — the destination may
+be a local path or the URL of a write-enabled server::
+
+    $ PYTHONPATH=src python -m repro.core.racat ingest out.ra a.npy b.ra
+    $ ... racat ingest http://host:8742/out.ra a.npy --codec zlib
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import zlib
-from typing import List, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -184,21 +191,38 @@ def _verify_chunked(hdr: Header, payload: bytes, trailer: bytes) -> List[str]:
 
 
 def inspect_file(path: str) -> str:
-    """Header plus — for chunked files — a chunk-table summary."""
+    """Header, trailing-metadata length, and — for chunked files — a
+    chunk-table summary."""
     hdr = header_of(path)
     lines = [format_header(hdr)]
-    if not (hdr.flags & FLAG_CHUNKED):
-        lines.append("chunks       none (payload is not chunk-compressed)")
-        return "\n".join(lines)
-    # the table is two small positioned reads — never the payload (for a
-    # URL: two ranged GETs through the pooled reader)
     if is_url(path):
         from .. import remote
 
-        table = chunked_codec.read_table(remote.get_reader(path), hdr)
+        size = remote.get_reader(path).size
     else:
-        with open(path, "rb") as f:
-            table = chunked_codec.read_table(f.fileno(), hdr)
+        size = os.path.getsize(path)
+    table = None
+    if hdr.flags & FLAG_CHUNKED:
+        # the table is two small positioned reads — never the payload (for a
+        # URL: two ranged GETs through the pooled reader)
+        if is_url(path):
+            from .. import remote
+
+            table = chunked_codec.read_table(remote.get_reader(path), hdr)
+        else:
+            with open(path, "rb") as f:
+                table = chunked_codec.read_table(f.fileno(), hdr)
+    # trailing user metadata = whatever sits between (payload + chunk table)
+    # and the optional 4-byte CRC trailer
+    meta_len = size - hdr.nbytes - hdr.data_length
+    if table is not None:
+        meta_len -= table.nbytes
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        meta_len -= 4
+    lines.append(f"metadata     {max(0, meta_len)} bytes")
+    if table is None:
+        lines.append("chunks       none (payload is not chunk-compressed)")
+        return "\n".join(lines)
     codec = chunked_codec.get_codec(table.codec_id)
     ratio = hdr.data_length / hdr.logical_nbytes if hdr.logical_nbytes else 1.0
     lines += [
@@ -236,62 +260,187 @@ def compress_file(
     return hdr.logical_nbytes, hdr.data_length
 
 
+def _source_rows(src: str) -> np.ndarray:
+    """Open one ingest source as an array-like with a leading row dim.
+    Plain local ``.ra`` files and ``.npy`` are memory-mapped (rows stream
+    without loading the file); compressed / remote sources decode fully."""
+    if src.endswith(".npy"):
+        if is_url(src):
+            import io as _io
+
+            from .. import remote
+
+            return np.load(_io.BytesIO(remote.fetch_bytes(src)), allow_pickle=False)
+        return np.load(src, mmap_mode="r", allow_pickle=False)
+    hdr = header_of(src)
+    if not is_url(src) and not hdr.compressed and not hdr.big_endian:
+        return raio.memmap(src)
+    return np.asarray(read(src, strict_flags=False))
+
+
+def ingest_files(
+    dst: str,
+    sources: List[str],
+    *,
+    codec: Optional[str] = None,
+    chunk_bytes: Optional[int] = None,
+    crc32: bool = False,
+    batch_rows: Optional[int] = None,
+) -> Tuple[int, "Header"]:
+    """Stream-concatenate ``sources`` (``.npy`` or ``.ra``, local or URL)
+    along axis 0 into one RawArray file through the incremental writer
+    (DESIGN.md §11) — rows flow source → writer in bounded batches, so the
+    result never materializes in RAM. ``dst`` may be a local path (crash-
+    safe temp + rename) or the URL of a write-enabled server (streamed
+    authenticated PUTs). Passing ``codec=``/``chunk_bytes=`` writes
+    chunk-compressed. Returns ``(rows, final_header)``."""
+    if not sources:
+        raise RawArrayError("ingest needs at least one source file")
+    first = _source_rows(sources[0])
+    if first.ndim == 0:
+        raise RawArrayError(f"{sources[0]}: cannot ingest a 0-d array")
+    row_shape = first.shape[1:]
+    dtype = np.dtype(first.dtype)
+    row_nbytes = max(1, int(dtype.itemsize * int(np.prod(row_shape, dtype=np.int64))))
+    if batch_rows is None:
+        batch_rows = max(1, (32 << 20) // row_nbytes)  # ~32 MiB per batch
+    chunked = codec is not None or chunk_bytes is not None
+    if is_url(dst):
+        from .. import remote
+
+        writer = remote.RemoteWriter(
+            dst, dtype, row_shape,
+            crc32=crc32, chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
+        )
+    else:
+        writer = raio.RaWriter(
+            dst, dtype, row_shape,
+            crc32=crc32, chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
+        )
+    with writer as w:
+        for i, src in enumerate(sources):
+            a = first if i == 0 else _source_rows(src)
+            if a.shape[1:] != row_shape or np.dtype(a.dtype) != dtype:
+                raise RawArrayError(
+                    f"{src}: rows are {a.dtype}{list(a.shape[1:])}, expected "
+                    f"{dtype}{list(row_shape)} (from {sources[0]})"
+                )
+            for lo in range(0, a.shape[0], batch_rows):
+                w.write_rows(a[lo : lo + batch_rows])
+        hdr = w.finalize()
+    return int(hdr.shape[0]), hdr
+
+
+_EPILOG = """\
+subcommands:
+  header     print the decoded numeric header
+  data       print the first payload elements (--limit)
+  meta       dump the trailing user metadata to stdout
+  od         print the od(1) commands that introspect this file (paper §3.2)
+  verify     recompute every integrity signal (header consistency, CRC32
+             trailer, zlib size, chunk-table geometry + per-chunk CRCs)
+  inspect    header + metadata length + chunk-table summary
+  compress   rewrite as chunk-compressed:  racat compress <src> <dst>
+  ingest     stream-concatenate .npy/.ra sources into one file or URL:
+             racat ingest <dst> <src...> [--codec C] [--crc32]
+
+every subcommand accepts http(s):// URLs where a byte-range server is
+serving (ingest destinations need a write-enabled server + RA_REMOTE_TOKEN).
+
+exit codes:
+  0   success (verify: file is internally consistent)
+  1   failure (verify found problems, source unreadable, ingest/upload
+      refused, malformed file)
+  2   usage error (unknown subcommand or bad arguments)
+"""
+
+
 def main(argv=None) -> int:
-    p = argparse.ArgumentParser(prog="racat", description=__doc__)
-    p.add_argument(
-        "cmd", choices=["header", "data", "meta", "od", "verify", "inspect", "compress"]
+    p = argparse.ArgumentParser(
+        prog="racat",
+        description=__doc__,
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
     )
-    p.add_argument("path", help="file path or http(s):// URL")
-    p.add_argument("dst", nargs="?", default=None,
-                   help="output path (compress only)")
+    p.add_argument(
+        "cmd",
+        choices=["header", "data", "meta", "od", "verify", "inspect",
+                 "compress", "ingest"],
+    )
+    p.add_argument("path", help="file path or http(s):// URL "
+                   "(compress: source; ingest: destination)")
+    p.add_argument("rest", nargs="*", default=[],
+                   help="compress: output path; ingest: source files")
     p.add_argument("--limit", type=int, default=16, help="max elements to print")
     p.add_argument("--codec", default=None,
-                   help="codec name for compress (default: RA_CODEC or zlib)")
+                   help="codec name for compress/ingest (default: RA_CODEC or zlib)")
     p.add_argument("--chunk-bytes", type=int, default=None,
-                   help="raw chunk size for compress (default: RA_CHUNK_BYTES or 1 MiB)")
+                   help="raw chunk size for compress/ingest "
+                   "(default: RA_CHUNK_BYTES or 1 MiB)")
     p.add_argument("--crc32", action="store_true",
-                   help="also write a file-level CRC trailer (compress only)")
+                   help="also write a file-level CRC trailer (compress/ingest)")
+    p.add_argument("--batch-rows", type=int, default=None,
+                   help="rows per streamed ingest batch (default: ~32 MiB worth)")
     args = p.parse_args(argv)
+    if args.rest and args.cmd not in ("compress", "ingest"):
+        p.error(f"{args.cmd} takes exactly one path "
+                f"(unexpected extra arguments: {' '.join(args.rest)})")
 
-    if args.cmd == "verify":
-        problems = verify_file(args.path)
-        if problems:
-            for msg in problems:
-                print(f"FAIL {args.path}: {msg}", file=sys.stderr)
-            return 1
-        print(f"OK {args.path}")
+    try:
+        if args.cmd == "verify":
+            problems = verify_file(args.path)
+            if problems:
+                for msg in problems:
+                    print(f"FAIL {args.path}: {msg}", file=sys.stderr)
+                return 1
+            print(f"OK {args.path}")
+            return 0
+
+        if args.cmd == "compress":
+            if len(args.rest) != 1:
+                p.error("compress needs an output path: racat compress <src> <dst>")
+            logical, stored = compress_file(
+                args.path, args.rest[0],
+                codec=args.codec, chunk_bytes=args.chunk_bytes, crc32=args.crc32,
+            )
+            ratio = stored / logical if logical else 1.0
+            print(f"OK {args.rest[0]}: {logical} -> {stored} bytes ({ratio:.3f})")
+            return 0
+
+        if args.cmd == "ingest":
+            if not args.rest:
+                p.error("ingest needs sources: racat ingest <dst> <src...>")
+            rows, hdr = ingest_files(
+                args.path, args.rest,
+                codec=args.codec, chunk_bytes=args.chunk_bytes,
+                crc32=args.crc32, batch_rows=args.batch_rows,
+            )
+            print(f"OK {args.path}: {rows} rows {list(hdr.shape)} "
+                  f"{hdr.dtype()} ({hdr.data_length} stored bytes)")
+            return 0
+
+        if args.cmd == "inspect":
+            print(inspect_file(args.path))
+            return 0
+
+        hdr = header_of(args.path)
+        if args.cmd == "header":
+            print(format_header(hdr))
+        elif args.cmd == "data":
+            arr = read(args.path, strict_flags=False)
+            flat = np.asarray(arr).reshape(-1)
+            np.set_printoptions(threshold=args.limit)
+            print(flat[: args.limit])
+            if flat.size > args.limit:
+                print(f"... ({flat.size} elements total)")
+        elif args.cmd == "meta":
+            sys.stdout.buffer.write(read_metadata(args.path))
+        elif args.cmd == "od":
+            print(od_commands(args.path, hdr))
         return 0
-
-    if args.cmd == "compress":
-        if not args.dst:
-            p.error("compress needs an output path: racat compress <src> <dst>")
-        logical, stored = compress_file(
-            args.path, args.dst,
-            codec=args.codec, chunk_bytes=args.chunk_bytes, crc32=args.crc32,
-        )
-        ratio = stored / logical if logical else 1.0
-        print(f"OK {args.dst}: {logical} -> {stored} bytes ({ratio:.3f})")
-        return 0
-
-    if args.cmd == "inspect":
-        print(inspect_file(args.path))
-        return 0
-
-    hdr = header_of(args.path)
-    if args.cmd == "header":
-        print(format_header(hdr))
-    elif args.cmd == "data":
-        arr = read(args.path, strict_flags=False)
-        flat = np.asarray(arr).reshape(-1)
-        np.set_printoptions(threshold=args.limit)
-        print(flat[: args.limit])
-        if flat.size > args.limit:
-            print(f"... ({flat.size} elements total)")
-    elif args.cmd == "meta":
-        sys.stdout.buffer.write(read_metadata(args.path))
-    elif args.cmd == "od":
-        print(od_commands(args.path, hdr))
-    return 0
+    except (RawArrayError, OSError) as e:
+        print(f"FAIL {args.path}: {e}", file=sys.stderr)
+        return 1
 
 
 if __name__ == "__main__":

@@ -21,6 +21,10 @@ the parallel I/O engine straight into one output buffer (DESIGN.md §8).
 (DESIGN.md §9): the index is fetched over HTTP and every shard read becomes
 engine-planned parallel byte-range requests through ``repro.remote`` —
 the same wave structure, remote sources.
+
+Writing is streaming-capable too (DESIGN.md §11): ``ShardedWriter`` feeds
+row batches of unknown total count, auto-rolls shards at a size threshold
+(``RA_SHARD_BYTES``), and publishes the index atomically at finalize.
 """
 
 from __future__ import annotations
@@ -36,10 +40,16 @@ import numpy as np
 from . import codec as chunked_codec
 from . import engine
 from . import io as raio
-from .io import is_url, join_path as _join
-from .spec import FLAG_CHUNKED, RawArrayError
+from .io import RaWriter, is_url, join_path as _join
+from .spec import FLAG_CHUNKED, RawArrayError, env_int as _env_int
 
 INDEX_NAME = "index.json"
+
+
+def default_shard_bytes() -> int:
+    """Auto-roll threshold for ``ShardedWriter`` in raw payload bytes
+    (knob ``RA_SHARD_BYTES``, default 256 MiB)."""
+    return max(1, _env_int("RA_SHARD_BYTES", 256 << 20))
 
 
 @dataclass(frozen=True)
@@ -145,6 +155,139 @@ def write_sharded(
     with open(os.path.join(dirpath, INDEX_NAME), "w") as f:
         f.write(idx.to_json())
     return idx
+
+
+class ShardedWriter:
+    """Streaming sharded-store writer (DESIGN.md §11): feed row batches of
+    unknown total count; shards auto-roll when the current shard's RAW
+    payload reaches ``shard_bytes`` (knob ``RA_SHARD_BYTES``, or pass
+    ``shard_rows`` for an exact row count per shard).
+
+    Every shard is an incremental ``RaWriter`` — written to a temp file and
+    atomically renamed at its roll, so a crash mid-stream leaves only whole,
+    valid shards plus one invisible temp. The ``index.json`` is written LAST
+    (also temp + rename): the store does not exist as a store until finalize
+    succeeds. The result is readable by ``read_slice`` / ``read_sharded``
+    and byte-identical, shard by shard, to ``io.write`` of each row slab.
+    """
+
+    def __init__(
+        self,
+        dirpath: str,
+        dtype,
+        row_shape: Tuple[int, ...],
+        *,
+        shard_bytes: Optional[int] = None,
+        shard_rows: Optional[int] = None,
+        crc32: bool = False,
+        chunked: bool = False,
+        codec: Optional[str] = None,
+        chunk_bytes: Optional[int] = None,
+    ):
+        if is_url(dirpath):
+            raise RawArrayError(f"ShardedWriter is local-only; got URL {dirpath}")
+        self.dirpath = dirpath
+        self._dtype = np.dtype(dtype)
+        self._row_shape = tuple(int(d) for d in row_shape)
+        row_nbytes = self._dtype.itemsize
+        for d in self._row_shape:
+            row_nbytes *= d
+        if shard_rows is not None:
+            self._shard_rows = max(1, int(shard_rows))
+        else:
+            nbytes = default_shard_bytes() if shard_bytes is None else max(1, shard_bytes)
+            self._shard_rows = max(1, nbytes // row_nbytes) if row_nbytes else 1 << 30
+        self._wkw = dict(crc32=crc32, chunked=chunked, codec=codec, chunk_bytes=chunk_bytes)
+        self._offsets: List[int] = [0]
+        self._files: List[str] = []
+        self._writer: Optional[RaWriter] = None
+        self._writer_rows = 0
+        self._state = "open"
+        os.makedirs(dirpath, exist_ok=True)
+
+    @property
+    def rows(self) -> int:
+        """Total rows written so far across all shards."""
+        return self._offsets[-1] + self._writer_rows
+
+    def _open_shard(self) -> RaWriter:
+        if self._writer is None:
+            fname = _shard_name(len(self._files))
+            self._files.append(fname)
+            self._writer = RaWriter(
+                os.path.join(self.dirpath, fname),
+                self._dtype, self._row_shape, **self._wkw,
+            )
+            self._writer_rows = 0
+        return self._writer
+
+    def _roll(self) -> None:
+        self._writer.finalize()
+        self._offsets.append(self._offsets[-1] + self._writer_rows)
+        self._writer = None
+        self._writer_rows = 0
+
+    def write_rows(self, rows: np.ndarray) -> int:
+        """Append a batch shaped ``(n, *row_shape)``, splitting it across
+        shard boundaries; returns total rows so far."""
+        if self._state != "open":
+            raise RawArrayError(f"write_rows on a {self._state} ShardedWriter")
+        a = np.asarray(rows)
+        pos, n = 0, a.shape[0]
+        while pos < n:
+            w = self._open_shard()
+            take = min(n - pos, self._shard_rows - self._writer_rows)
+            w.write_rows(a[pos : pos + take])
+            self._writer_rows += take
+            pos += take
+            if self._writer_rows >= self._shard_rows:
+                self._roll()
+        return self.rows
+
+    def finalize(self) -> ShardIndex:
+        """Seal the last shard and atomically publish ``index.json``.
+        A store that never received rows still gets one (empty) shard, the
+        same layout ``write_sharded`` produces for an empty array."""
+        if self._state != "open":
+            raise RawArrayError(f"finalize on a {self._state} ShardedWriter")
+        if self._writer is not None:
+            self._roll()
+        if not self._files:  # zero rows: one empty shard, like write_sharded
+            self._open_shard()
+            self._roll()
+        idx = ShardIndex(
+            shape=(self._offsets[-1],) + self._row_shape,
+            dtype=str(self._dtype),
+            axis=0,
+            offsets=tuple(self._offsets),
+            files=tuple(self._files),
+        )
+        tmp = os.path.join(self.dirpath, INDEX_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            f.write(idx.to_json())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.dirpath, INDEX_NAME))
+        self._state = "finalized"
+        return idx
+
+    def abort(self) -> None:
+        """Drop the in-progress shard (finished shards and any existing
+        index are left as they were; no index is written)."""
+        if self._state == "open":
+            self._state = "aborted"
+            if self._writer is not None:
+                self._writer.abort()
+                self._writer = None
+
+    def __enter__(self) -> "ShardedWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abort()
+        elif self._state == "open":
+            self.finalize()
 
 
 def load_index(dirpath: str) -> ShardIndex:

@@ -1,4 +1,4 @@
-"""RawArray on-disk format constants (paper Table 1 & 2).
+"""RawArray on-disk format constants (paper Table 1 & 2; DESIGN.md §1, flag bits §7).
 
 The file is a simple concatenation::
 

@@ -1,10 +1,11 @@
 """RawArray-backed data pipeline (the paper's contribution as the loader)."""
 
-from .dataset import RaDataset, RaDatasetWriter, dataset_manifest
+from .dataset import DatasetBuilder, RaDataset, RaDatasetWriter, dataset_manifest
 from .loader import DataLoader, LoaderState
 from .synth import make_image_dataset, make_token_dataset
 
 __all__ = [
+    "DatasetBuilder",
     "RaDataset",
     "RaDatasetWriter",
     "dataset_manifest",

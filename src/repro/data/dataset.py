@@ -23,6 +23,10 @@ block cache turns repeated epoch traversals into RAM hits. The engine's
 ``rows``/``gather`` wave plans are identical in both modes; only the
 sparse-leftover path differs (ranged reads instead of mmap fancy
 indexing, since there is nothing to map).
+
+Datasets are built by streaming (DESIGN.md §11): ``DatasetBuilder`` feeds
+samples or row batches through per-field incremental writers in bounded
+memory and publishes the manifest atomically at ``finish``.
 """
 
 from __future__ import annotations
@@ -52,12 +56,23 @@ def dataset_manifest(root: str) -> Dict[str, Any]:
         return json.load(f)
 
 
-class RaDatasetWriter:
-    """Streaming writer: append row batches, shards roll at ``shard_rows``.
+class DatasetBuilder:
+    """Streaming dataset ingest (DESIGN.md §11): feed samples or row
+    batches; every field streams through an incremental ``RaWriter`` into
+    the current shard file, shards roll at ``shard_rows``, and the manifest
+    is written LAST (temp + atomic rename) — so peak memory is one write
+    buffer per field (not a shard), a crash mid-ingest leaves only whole
+    shard files plus invisible temps, and the directory is not a dataset
+    until ``finish`` succeeds.
 
+    This is the MNIST/CIFAR-style converter entry point the paper sketches
+    (``repro.formats`` converters call it; see ``examples/streaming_ingest.py``).
     ``chunked=True`` (or ``codec=``/``chunk_bytes=``) writes every shard
-    file chunk-compressed (DESIGN.md §10); readers then decode only the
-    chunks overlapping each row request."""
+    file chunk-compressed (DESIGN.md §10) — compression runs chunk-parallel
+    WHILE samples arrive; readers then decode only the chunks overlapping
+    each row request. Output is byte-identical to the pre-streaming writer
+    (one monolithic ``ra.write`` per shard) for the same sample stream.
+    """
 
     def __init__(
         self,
@@ -65,6 +80,7 @@ class RaDatasetWriter:
         fields: Dict[str, Tuple[Tuple[int, ...], str]],
         shard_rows: int = 8192,
         *,
+        crc32: bool = False,
         chunked: bool = False,
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
@@ -75,47 +91,83 @@ class RaDatasetWriter:
         self.chunked = chunked or codec is not None or chunk_bytes is not None
         self.codec = codec
         self.chunk_bytes = chunk_bytes
-        self._buf: Dict[str, List[np.ndarray]] = {k: [] for k in fields}
-        self._buffered = 0
+        self.crc32 = crc32
+        self._writers: Optional[Dict[str, ra.io.RaWriter]] = None
+        self._shard_fill = 0  # rows in the open shard
         self._shards: List[Dict[str, Any]] = []
+        self._state = "open"
         os.makedirs(root, exist_ok=True)
 
+    @property
+    def rows(self) -> int:
+        """Total rows ingested so far."""
+        return sum(s["rows"] for s in self._shards) + self._shard_fill
+
+    def _open_shard(self) -> Dict[str, ra.io.RaWriter]:
+        if self._writers is None:
+            idx = len(self._shards)
+            self._writers = {
+                name: ra.io.RaWriter(
+                    os.path.join(self.root, f"{name}_{idx:05d}.ra"),
+                    np.dtype(dtype), tuple(shape),
+                    crc32=self.crc32, chunked=self.chunked,
+                    codec=self.codec, chunk_bytes=self.chunk_bytes,
+                )
+                for name, (shape, dtype) in self.fields.items()
+            }
+            self._shard_fill = 0
+        return self._writers
+
+    def _roll(self) -> None:
+        idx = len(self._shards)
+        files = {}
+        for name, w in self._writers.items():
+            w.finalize()
+            files[name] = f"{name}_{idx:05d}.ra"
+        self._shards.append({"files": files, "rows": self._shard_fill})
+        self._writers = None
+        self._shard_fill = 0
+
     def append(self, **arrays: np.ndarray) -> None:
+        """Append one row batch: every field, same leading dimension. The
+        batch is split across shard boundaries as needed."""
+        if self._state != "open":
+            raise ra.RawArrayError(f"append on a {self._state} DatasetBuilder")
+        batch: Dict[str, np.ndarray] = {}
         n = None
         for name, (shape, dtype) in self.fields.items():
             a = np.asarray(arrays[name])
             assert a.shape[1:] == tuple(shape), f"{name}: {a.shape} vs {shape}"
             n = a.shape[0] if n is None else n
             assert a.shape[0] == n
-            self._buf[name].append(a.astype(dtype, copy=False))
-        self._buffered += n
-        while self._buffered >= self.shard_rows:
-            self._flush(self.shard_rows)
+            batch[name] = a
+        pos = 0
+        while pos < n:
+            writers = self._open_shard()
+            take = min(n - pos, self.shard_rows - self._shard_fill)
+            for name, a in batch.items():
+                writers[name].write_rows(a[pos : pos + take])
+            self._shard_fill += take
+            pos += take
+            if self._shard_fill >= self.shard_rows:
+                self._roll()
 
-    def _flush(self, rows: int) -> None:
-        if rows == 0:
-            return
-        idx = len(self._shards)
-        files = {}
-        for name in self.fields:
-            buf = np.concatenate(self._buf[name], axis=0)
-            take, rest = buf[:rows], buf[rows:]
-            self._buf[name] = [rest] if rest.size else []
-            fname = f"{name}_{idx:05d}.ra"
-            ra.write(
-                os.path.join(self.root, fname),
-                take,
-                chunked=self.chunked,
-                codec=self.codec,
-                chunk_bytes=self.chunk_bytes,
-            )
-            files[name] = fname
-        self._shards.append({"files": files, "rows": rows})
-        self._buffered -= rows
+    def add(self, **sample: np.ndarray) -> None:
+        """Append ONE sample (each field without the leading batch dim) —
+        the live-capture convenience over ``append``."""
+        self.append(**{k: np.asarray(v)[None] for k, v in sample.items()})
 
     def finish(self, metadata: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        if self._buffered:
-            self._flush(self._buffered)
+        """Seal the open shard and atomically publish ``manifest.json``;
+        returns the manifest. Calling it twice — or after ``abort`` — raises."""
+        if self._state != "open":
+            raise ra.RawArrayError(f"finish on a {self._state} DatasetBuilder")
+        if self._writers is not None and self._shard_fill:
+            self._roll()
+        elif self._writers is not None:  # opened but empty: drop, don't publish
+            for w in self._writers.values():
+                w.abort()
+            self._writers = None
         man = {
             "format": "rawarray-dataset-v1",
             "fields": {
@@ -126,9 +178,38 @@ class RaDatasetWriter:
             "total_rows": int(sum(s["rows"] for s in self._shards)),
             "metadata": metadata or {},
         }
-        with open(os.path.join(self.root, MANIFEST), "w") as f:
+        tmp = os.path.join(self.root, MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
             json.dump(man, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.root, MANIFEST))
+        self._state = "finished"
         return man
+
+    def abort(self) -> None:
+        """Drop the open shard's temp files; no manifest is written."""
+        if self._state == "open":
+            self._state = "aborted"
+            if self._writers is not None:
+                for w in self._writers.values():
+                    w.abort()
+                self._writers = None
+
+    def __enter__(self) -> "DatasetBuilder":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abort()
+        elif self._state == "open":
+            self.finish()
+
+
+# Pre-streaming name, kept for compatibility: the old RaDatasetWriter
+# buffered a whole shard in RAM and wrote it monolithically; DatasetBuilder
+# produces byte-identical output incrementally.
+RaDatasetWriter = DatasetBuilder
 
 
 @dataclass

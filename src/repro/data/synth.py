@@ -1,4 +1,5 @@
-"""Synthetic dataset builders (offline container: no real MNIST/CIFAR/corpus).
+"""Synthetic dataset builders (offline container: no real MNIST/CIFAR/corpus;
+dataset layout DESIGN.md §4, streamed through the §11 ingest plane).
 
 * ``make_token_dataset`` — Zipfian token documents packed to fixed length,
   written as a RaDataset (uint32 tokens). Used by the e2e LM example.

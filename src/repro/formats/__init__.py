@@ -11,6 +11,8 @@ implement the baseline too*. So:
   (IHDR/IDAT/IEND, all five filter types on decode).
 * :mod:`repro.formats.nrrd`    — NRRD text-header + raw payload.
 * :mod:`repro.formats.npy`     — thin wrapper over numpy's own .npy.
+* :mod:`repro.formats.ingest`  — foreign-format → RawArray dataset
+  converters streaming through the ingest plane (DESIGN.md §11).
 """
 
-from . import hdf5min, npy, nrrd, png  # noqa: F401
+from . import hdf5min, ingest, npy, nrrd, png  # noqa: F401

@@ -1,4 +1,5 @@
-"""Minimal, structurally faithful HDF5 writer/reader (pure Python).
+"""Minimal, structurally faithful HDF5 writer/reader (pure Python;
+benchmark baseline DESIGN.md §6).
 
 Offline container ⇒ no h5py/libhdf5, but the paper's headline claim is
 "2–3× faster than HDF5", so we implement the baseline ourselves per the

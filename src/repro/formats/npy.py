@@ -1,4 +1,5 @@
-"""numpy .npy wrapper — the paper discusses NPY as 'quite fast, but not so
+"""numpy .npy wrapper (benchmark baseline, DESIGN.md §6) — the paper
+discusses NPY as 'quite fast, but not so
 simple and not widely implemented in other languages'. We benchmark against
 numpy's own battle-tested implementation (no reimplementation needed)."""
 

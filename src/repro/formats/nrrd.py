@@ -1,4 +1,5 @@
 """NRRD (Nearly Raw Raster Data) — the paper's "strong competitor" (§1).
+Benchmark baseline (DESIGN.md §6).
 
 Text header + raw payload; raw encoding only (the paper prefers external
 compression anyway). Implemented so benchmarks can compare header-parse

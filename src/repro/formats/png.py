@@ -1,4 +1,5 @@
-"""Pure-Python PNG codec on stdlib zlib (for the paper's Fig-3 benchmark).
+"""Pure-Python PNG codec on stdlib zlib (for the paper's Fig-3 benchmark;
+baseline DESIGN.md §6).
 
 Supports 8-bit grayscale (color type 0) and 8-bit RGB (color type 2),
 which covers MNIST- and CIFAR-style images. The encoder uses filter type 0

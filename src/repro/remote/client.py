@@ -15,10 +15,19 @@ traversals are served from RAM.
 Module-level helpers mirror ``repro.core.io`` one-for-one: ``remote_read``
 / ``remote_read_into`` / ``remote_header_of`` / ``remote_read_metadata``.
 
+The write direction (DESIGN.md §11) mirrors the local ingest plane:
+``upload_bytes`` is one whole-object PUT with server-side atomic publish
+(``core.io.write`` dispatches URL writes to it), and ``RemoteWriter`` is
+the incremental ``RaWriter`` whose byte sink is the server's
+append/patch/commit/abort upload session — identical interface, identical
+bytes, streamed over authenticated PUTs (token knob ``RA_REMOTE_TOKEN``).
+
 Failure semantics: a dead server, a mid-transfer disconnect, or a range the
 server cannot satisfy raises ``RawArrayError`` after bounded retries on
 fresh connections — never a hang (sockets carry a timeout, knob
-``RA_REMOTE_TIMEOUT``).
+``RA_REMOTE_TIMEOUT``). Upload *appends* are the exception: they are never
+blind-retried (a half-applied append would desynchronize the session and
+the server answers 409 with its actual part size instead).
 """
 
 from __future__ import annotations
@@ -37,7 +46,7 @@ import numpy as np
 from ..core import codec as chunked_codec
 from ..core import engine
 from ..core.header import Header, decode_header
-from ..core.io import is_url, read_chunked
+from ..core.io import RaWriter as _io_RaWriter, is_url, read_chunked
 from ..core.spec import (
     FLAG_CHUNKED,
     FLAG_CRC32_TRAILER,
@@ -455,6 +464,210 @@ def fetch_bytes(url: str, *, timeout: Optional[float] = None, retries: int = 2) 
         finally:
             conn.close()
     raise RawArrayError(f"GET {url} failed after {max(0, retries) + 1} attempts: {err!r}")
+
+
+# ------------------------------------------------------------- upload plane
+def default_token() -> Optional[str]:
+    """Upload bearer token (knob ``RA_REMOTE_TOKEN``; DESIGN.md §11)."""
+    return os.environ.get("RA_REMOTE_TOKEN") or None
+
+
+def _views_of(data) -> Tuple[List[memoryview], int]:
+    views = []
+    total = 0
+    for v in data if isinstance(data, (list, tuple)) else [data]:
+        mv = v if isinstance(v, memoryview) else memoryview(v)
+        if mv.format != "B" or mv.ndim != 1:
+            mv = mv.cast("B")
+        if mv.nbytes:
+            views.append(mv)
+            total += mv.nbytes
+    return views, total
+
+
+def _put(
+    url: str,
+    data,
+    headers: Dict[str, str],
+    *,
+    token: Optional[str],
+    timeout: Optional[float],
+    retries: int,
+    conn: Optional[http.client.HTTPConnection] = None,
+) -> Tuple[int, bytes, Optional[http.client.HTTPConnection]]:
+    """One authenticated PUT. ``data`` is bytes / a view / a list of views;
+    the body streams piecewise with an explicit Content-Length (the server
+    does not decode chunked encoding). With ``conn`` the request reuses a
+    keep-alive connection and returns it (or a fresh one) for the next call;
+    transport errors retry ``retries`` times on fresh connections."""
+    tok = default_token() if token is None else token
+    if not tok:
+        raise RawArrayError(
+            f"upload to {url} needs a bearer token (RA_REMOTE_TOKEN or token=)"
+        )
+    parts = urlsplit(url)
+    path = parts.path or "/"
+    if parts.query:
+        path += "?" + parts.query
+    views, total = _views_of(data)
+    hdrs = dict(headers)
+    hdrs["Authorization"] = f"Bearer {tok}"
+    hdrs["Content-Length"] = str(total)
+    cls = http.client.HTTPSConnection if parts.scheme == "https" else http.client.HTTPConnection
+    err: Optional[BaseException] = None
+    for attempt in range(max(0, retries) + 1):
+        c = conn
+        conn = None
+        if c is None:
+            c = cls(parts.hostname or "", parts.port,
+                    timeout=default_timeout() if timeout is None else timeout)
+        try:
+            c.request("PUT", path, body=iter(views), headers=hdrs)
+            resp = c.getresponse()
+            body = resp.read()
+            return resp.status, body, c
+        except (OSError, http.client.HTTPException) as e:
+            try:
+                c.close()
+            except Exception:
+                pass
+            err = e
+            if retries == 0:
+                break
+    raise RawArrayError(
+        f"PUT {url} failed after {max(1, retries + 1)} attempts: {err!r}"
+    )
+
+
+def upload_bytes(
+    url: str,
+    data,
+    *,
+    token: Optional[str] = None,
+    timeout: Optional[float] = None,
+    retries: int = 2,
+) -> int:
+    """Whole-object authenticated upload with server-side ATOMIC publish
+    (body → same-directory temp → fsync → rename; DESIGN.md §11). ``data``
+    is bytes or a list of byte views (streamed without concatenation).
+    Safe to retry: replaying the PUT just republishes the same bytes.
+    Returns bytes uploaded. This is what ``core.io.write`` dispatches
+    ``http(s)://`` destinations to."""
+    views, total = _views_of(data)
+    status, body, conn = _put(url, views, {}, token=token, timeout=timeout, retries=retries)
+    if conn is not None:
+        conn.close()
+    if status not in (200, 201):
+        raise RawArrayError(
+            f"upload of {url} refused: HTTP {status} {body.decode(errors='replace').strip()}"
+        )
+    return total
+
+
+class _UploadSink:
+    """Remote byte sink for ``RaWriter`` (DESIGN.md §11): the same
+    append/patch/commit/abort surface as the local temp-file sink, spoken
+    as authenticated PUTs against the server's ``<path>.part`` upload
+    session. Appends ride one keep-alive connection; commit renames the
+    part into place server-side (the remote twin of fsync + rename)."""
+
+    def __init__(self, url: str, *, token: Optional[str] = None, timeout: Optional[float] = None):
+        if not is_url(url):
+            raise RawArrayError(f"not an http(s) URL: {url!r}")
+        self.url = url
+        self._token = token
+        self._timeout = timeout
+        self._conn: Optional[http.client.HTTPConnection] = None
+        self.size = 0
+        # reset the session: a predecessor SIGKILLed mid-stream leaves a
+        # stale <path>.part server-side, which would 409 our first append
+        # forever (sessions are single-writer; concurrent writers to one
+        # path are unsupported and now clobber instead of deadlock)
+        self._session_put("abort", b"", retries=1)
+
+    def _session_put(self, mode: str, data, *, offset: Optional[int] = None,
+                     retries: int = 0) -> None:
+        headers = {"X-RA-Upload": mode}
+        if offset is not None:
+            headers["X-RA-Offset"] = str(offset)
+        status, body, self._conn = _put(
+            self.url, data, headers,
+            token=self._token, timeout=self._timeout, retries=retries,
+            conn=self._conn,
+        )
+        if status not in (200, 201):
+            raise RawArrayError(
+                f"upload {mode} of {self.url} at {offset} refused: HTTP {status} "
+                f"{body.decode(errors='replace').strip()}"
+            )
+
+    def append(self, views) -> int:
+        _, total = _views_of(views)
+        # appends are NOT blind-retried: a replay after a half-applied body
+        # would double bytes; the server's 409 (offset != part size) catches
+        # any desync loudly instead
+        self._session_put("append", views, offset=self.size)
+        self.size += total
+        return total
+
+    def patch(self, offset: int, data) -> None:
+        self._session_put("patch", data, offset=offset)
+
+    def commit(self) -> None:
+        self._session_put("commit", b"")
+        self.close()
+
+    def abort(self) -> None:
+        try:
+            self._session_put("abort", b"", retries=1)
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except Exception:
+                pass
+            self._conn = None
+
+
+class RemoteWriter(_io_RaWriter):
+    """Incremental RawArray writer streaming to a URL (DESIGN.md §11).
+
+    Exactly ``core.io.RaWriter`` — same row-batch interface, same chunk-
+    parallel compression, same finalize patch order, byte-identical output —
+    with the byte sink swapped for the server's authenticated upload
+    session: bytes accumulate in ``<path>.part`` server-side and the final
+    commit atomically renames them into place, so a dropped client never
+    publishes a partial object::
+
+        with RemoteWriter(f"{server.url}/out.ra", np.float32, (256,),
+                          token=TOKEN, chunked=True) as w:
+            for batch in batches:
+                w.write_rows(batch)
+    """
+
+    def __init__(
+        self,
+        url: str,
+        dtype,
+        row_shape: Tuple[int, ...] = (),
+        *,
+        token: Optional[str] = None,
+        timeout: Optional[float] = None,
+        crc32: bool = False,
+        chunked: bool = False,
+        codec: Optional[str] = None,
+        chunk_bytes: Optional[int] = None,
+        metadata: Optional[bytes] = None,
+    ):
+        super().__init__(
+            url, dtype, row_shape,
+            crc32=crc32, chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
+            metadata=metadata,
+            sink=_UploadSink(url, token=token, timeout=timeout),
+        )
 
 
 # ----------------------------------------------------- io.py mirror functions

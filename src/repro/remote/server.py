@@ -1,5 +1,5 @@
 """Stdlib-only threaded HTTP byte-range server for RawArray trees
-(DESIGN.md §9).
+(DESIGN.md §9; upload plane §11).
 
 Serves a directory of ``.ra`` files — including sharded stores, dataset
 directories, and checkpoint directories (their ``index.json`` /
@@ -15,11 +15,20 @@ remote array plane needs:
   clients can pin a version and revalidate for free;
 * ``GET /header/<path>`` fast path: the decoded RawArray header as JSON —
   one round trip, no range arithmetic on the client;
-* ``HEAD`` for size/ETag discovery.
+* ``HEAD`` for size/ETag discovery;
+* authenticated ``PUT /<path>`` upload plane (DESIGN.md §11): whole-object
+  upload with atomic publish (temp + rename), plus an append/patch/commit/
+  abort session protocol driven by the ``X-RA-Upload`` header that mirrors
+  the local writer's temp-file protocol — streamed bytes accumulate in
+  ``<path>.part``, ``commit`` fsyncs and renames, so a dropped client never
+  leaves a partial object visible. Uploads are OFF unless the server is
+  started with an upload token (``--upload-token`` / ``RA_REMOTE_TOKEN``)
+  and every PUT carries it as ``Authorization: Bearer <token>``.
 
 Run standalone::
 
     PYTHONPATH=src python -m repro.remote.server <root> [--host H] [--port P]
+        [--upload-token TOKEN]
 
 or in-process (tests, benchmarks)::
 
@@ -70,6 +79,11 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         return full
 
     def _fail(self, status: int, msg: str) -> None:
+        # a PUT rejected before its body was consumed would leave the body
+        # bytes on the keep-alive socket, where they'd be parsed as the next
+        # request line — drain them (bounded) or give up on the connection
+        if self.command == "PUT":
+            self._drain_body()
         body = (msg + "\n").encode()
         self.send_response(status)
         self.send_header("Content-Type", "text/plain")
@@ -79,6 +93,27 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
             self.wfile.write(body)
         except OSError:
             pass
+
+    def _drain_body(self) -> None:
+        """Read and discard any unread request body so the keep-alive
+        connection stays usable; close the connection instead when the
+        length is unknown/garbage."""
+        try:
+            left = int(self.headers.get("Content-Length", "0"))
+        except ValueError:
+            left = -1
+        if left < 0:
+            self.close_connection = True
+            return
+        try:
+            while left > 0:
+                piece = self.rfile.read(min(_COPY_CHUNK, left))
+                if not piece:
+                    self.close_connection = True
+                    return
+                left -= len(piece)
+        except OSError:
+            self.close_connection = True
 
     def _parse_range(self, size: int) -> Optional[Tuple[int, int]]:
         """Parse a single-range ``Range`` header into ``(start, stop)``.
@@ -208,6 +243,155 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         except OSError:
             pass
 
+    # ---- upload plane (DESIGN.md §11) --------------------------------------
+    def _resolve_write(self, relpath: str) -> Optional[str]:
+        """Map a URL path onto a WRITABLE location under the root; ``None``
+        if it escapes the root or names a directory. The file need not
+        exist; missing parent directories are created."""
+        root = self.server.root  # type: ignore[attr-defined]
+        full = os.path.realpath(os.path.join(root, relpath.lstrip("/")))
+        if full != root and not full.startswith(root + os.sep):
+            return None
+        if full == root or os.path.isdir(full):
+            return None
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        return full
+
+    def _authorized(self) -> bool:
+        token = getattr(self.server, "upload_token", None)
+        if not token:
+            self._fail(403, "server is read-only (start with --upload-token)")
+            return False
+        got = self.headers.get("Authorization", "")
+        if got != f"Bearer {token}":
+            self._fail(401, "missing or wrong upload token")
+            return False
+        return True
+
+    def _read_body_to(self, f, offset: int) -> int:
+        """Stream the request body into ``f`` at ``offset``; returns bytes
+        written. Requires ``Content-Length`` (chunked encoding is not
+        decoded by this server)."""
+        length = self.headers.get("Content-Length")
+        if length is None:
+            self._fail(411, "Content-Length required")
+            self.close_connection = True  # body length unknown: can't drain
+            return -1
+        try:
+            left = int(length)
+        except ValueError:
+            left = -1
+        if left < 0:
+            self._fail(400, f"bad Content-Length: {length!r}")
+            return -1
+        f.seek(offset)
+        while left:
+            piece = self.rfile.read(min(_COPY_CHUNK, left))
+            if not piece:
+                break
+            f.write(piece)
+            left -= len(piece)
+        if left:
+            self._fail(400, "request body shorter than Content-Length")
+            return -1
+        return int(length)
+
+    def _ok(self, status: int, path: Optional[str] = None, **extra) -> None:
+        body_d = dict(extra)
+        if path is not None and os.path.exists(path):
+            st = os.stat(path)
+            body_d["etag"] = file_etag(st)
+            body_d["size"] = st.st_size
+        body = (json.dumps(body_d) + "\n").encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except OSError:
+            pass
+
+    def do_PUT(self) -> None:
+        """Upload plane (DESIGN.md §11). Dispatch on ``X-RA-Upload``:
+
+        =========  ==========================================================
+        (absent)   whole-object upload: body → same-dir temp, fsync, rename
+        append     body → ``<path>.part`` at ``X-RA-Offset`` (must equal the
+                   part's current size; 409 + current size otherwise)
+        patch      body overwrites ``[offset, offset+len)`` INSIDE the part
+                   (the finalize header patch; 416 if it sticks out)
+        commit     fsync ``<path>.part``, atomically rename to ``<path>``
+        abort      delete ``<path>.part``
+        =========  ==========================================================
+        """
+        if not self._authorized():
+            return
+        relpath = unquote(urlsplit(self.path).path)
+        full = self._resolve_write(relpath)
+        if full is None:
+            self._fail(404, "path escapes the served root or is a directory")
+            return
+        mode = (self.headers.get("X-RA-Upload") or "").strip().lower()
+        try:
+            if mode == "":
+                tmp = f"{full}.upload-{threading.get_ident():x}"
+                try:
+                    with open(tmp, "wb") as f:
+                        if self._read_body_to(f, 0) < 0:
+                            return
+                        f.flush()
+                        os.fsync(f.fileno())
+                    os.replace(tmp, full)
+                finally:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+                self._ok(201, full)
+            elif mode in ("append", "patch"):
+                part = full + ".part"
+                try:
+                    offset = int(self.headers.get("X-RA-Offset", ""))
+                except ValueError:
+                    self._fail(400, "append/patch need an integer X-RA-Offset")
+                    return
+                size = os.path.getsize(part) if os.path.exists(part) else 0
+                try:
+                    length = int(self.headers.get("Content-Length", 0))
+                except ValueError:
+                    length = -1
+                if length < 0:
+                    self._fail(400, "bad Content-Length")
+                    return
+                if mode == "append" and offset != size:
+                    self._fail(409, f"append offset {offset} != part size {size}")
+                    return
+                if mode == "patch" and offset + length > size:
+                    self._fail(416, f"patch [{offset}, {offset + length}) outside part of {size}")
+                    return
+                with open(part, "r+b" if os.path.exists(part) else "w+b") as f:
+                    if self._read_body_to(f, offset) < 0:
+                        return
+                self._ok(200, part)
+            elif mode == "commit":
+                part = full + ".part"
+                if not os.path.exists(part):
+                    self._fail(404, "no upload session to commit (missing .part)")
+                    return
+                with open(part, "rb") as f:
+                    os.fsync(f.fileno())
+                os.replace(part, full)
+                self._ok(201, full)
+            elif mode == "abort":
+                try:
+                    os.unlink(full + ".part")
+                except FileNotFoundError:
+                    pass
+                self._ok(200)
+            else:
+                self._fail(400, f"unknown X-RA-Upload mode {mode!r}")
+        except OSError as e:
+            self._fail(500, f"upload failed: {e}")
+
     # ---- verbs -------------------------------------------------------------
     def _route(self, head_only: bool) -> None:
         path = unquote(urlsplit(self.path).path)
@@ -231,15 +415,27 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
 
 
 class ArrayServer(http.server.ThreadingHTTPServer):
-    """Threaded byte-range server rooted at one directory."""
+    """Threaded byte-range server rooted at one directory.
+
+    ``upload_token=None`` (default) keeps the server strictly read-only;
+    passing a token enables the PUT upload plane (DESIGN.md §11) for
+    requests carrying ``Authorization: Bearer <token>``."""
 
     daemon_threads = True
 
-    def __init__(self, root: str, address=("127.0.0.1", 0), *, verbose: bool = False):
+    def __init__(
+        self,
+        root: str,
+        address=("127.0.0.1", 0),
+        *,
+        verbose: bool = False,
+        upload_token: Optional[str] = None,
+    ):
         self.root = os.path.realpath(root)
         if not os.path.isdir(self.root):
             raise RawArrayError(f"server root is not a directory: {root}")
         self.verbose = verbose
+        self.upload_token = upload_token
         super().__init__(address, RangeRequestHandler)
 
     @property
@@ -252,11 +448,19 @@ class ArrayServer(http.server.ThreadingHTTPServer):
         return f"http://{host}:{self.port}"
 
 
-def serve(root: str, host: str = "127.0.0.1", port: int = 0, *, verbose: bool = False) -> ArrayServer:
+def serve(
+    root: str,
+    host: str = "127.0.0.1",
+    port: int = 0,
+    *,
+    verbose: bool = False,
+    upload_token: Optional[str] = None,
+) -> ArrayServer:
     """Start an ``ArrayServer`` on a daemon thread; returns the (already
     listening) server — ``server.url`` is ready immediately, ``port=0``
-    picks an ephemeral port. Stop with ``server.shutdown()``."""
-    server = ArrayServer(root, (host, port), verbose=verbose)
+    picks an ephemeral port. Stop with ``server.shutdown()``. Pass
+    ``upload_token`` to enable authenticated uploads (DESIGN.md §11)."""
+    server = ArrayServer(root, (host, port), verbose=verbose, upload_token=upload_token)
     t = threading.Thread(target=server.serve_forever, daemon=True, name="ra-remote-srv")
     t.start()
     return server
@@ -268,9 +472,19 @@ def main(argv=None) -> int:
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=8742)
     p.add_argument("--verbose", action="store_true", help="log each request")
+    p.add_argument(
+        "--upload-token",
+        default=os.environ.get("RA_REMOTE_TOKEN") or None,
+        help="enable authenticated PUT uploads with this bearer token "
+        "(default: RA_REMOTE_TOKEN env var; omit for a read-only server)",
+    )
     args = p.parse_args(argv)
-    server = ArrayServer(args.root, (args.host, args.port), verbose=args.verbose)
-    print(f"serving {server.root} at {server.url} (Ctrl-C to stop)")
+    server = ArrayServer(
+        args.root, (args.host, args.port),
+        verbose=args.verbose, upload_token=args.upload_token,
+    )
+    mode = "read-write" if args.upload_token else "read-only"
+    print(f"serving {server.root} at {server.url} [{mode}] (Ctrl-C to stop)")
     try:
         server.serve_forever()
     except KeyboardInterrupt:

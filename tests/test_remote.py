@@ -145,12 +145,19 @@ def test_remote_read_into_zero_alloc_path(served):
         ra.read_into(f"{base}/r.ra", np.empty((3, 3), np.float32))
 
 
-def test_write_side_refuses_urls(served):
+def test_mmap_side_refuses_urls_and_write_needs_auth(served, monkeypatch):
+    """mmap/append stay local-only; ``write`` to a URL now goes through the
+    upload plane (DESIGN.md §11) — against this read-only server it must
+    fail loudly (403), and without a token it must not even try."""
     root, base = served
     _write(root, "w.ra", np.zeros(4, np.float32))
     url = f"{base}/w.ra"
-    with pytest.raises(ra.RawArrayError, match="local-only"):
+    monkeypatch.delenv("RA_REMOTE_TOKEN", raising=False)
+    with pytest.raises(ra.RawArrayError, match="bearer token"):
         ra.write(url, np.zeros(4, np.float32))
+    monkeypatch.setenv("RA_REMOTE_TOKEN", "some-token")
+    with pytest.raises(ra.RawArrayError, match="403"):
+        ra.write(url, np.zeros(4, np.float32))  # this server is read-only
     with pytest.raises(ra.RawArrayError, match="local-only"):
         ra.memmap(url)
     with pytest.raises(ra.RawArrayError, match="local-only"):
@@ -377,8 +384,10 @@ def test_checkpoint_remote_restore(served):
         assert np.array_equal(got[k], params[k])
     sl = store.restore_resharded(url, "param__w", row_start=20, row_stop=50)
     assert np.array_equal(sl, params["w"][20:50])
-    with pytest.raises(ra.RawArrayError, match="local-only"):
-        store.save_checkpoint(url, 43, params)
+    # saves to a URL go through the upload plane (DESIGN.md §11) — against
+    # this READ-ONLY server they must fail loudly, not half-publish
+    with pytest.raises(ra.RawArrayError, match="bearer token|403"):
+        store.save_checkpoint(base, 43, params)
 
 
 def test_racat_over_http(served, capsys):

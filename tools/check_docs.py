@@ -1,0 +1,108 @@
+"""Docs drift checker (CI: the docs job fails when this fails).
+
+Two guarantees:
+
+1. every fenced ``python`` code block in README.md actually RUNS (each
+   block executes in its own subprocess with ``PYTHONPATH=src``) — the
+   quickstart can never rot against the API;
+2. the README's env-knob table lists EXACTLY the ``RA_*`` knobs read in
+   source (``src/`` + ``tests/conftest.py``), both directions — no
+   undocumented knobs, no stale table rows.
+
+    PYTHONPATH=src python tools/check_docs.py [--skip-blocks]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(REPO, "README.md")
+
+KNOB_RE = re.compile(r"\bRA_[A-Z][A-Z0-9_]*\b")
+BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+TABLE_ROW_RE = re.compile(r"^\|\s*`(RA_[A-Z0-9_]+)`\s*\|", re.MULTILINE)
+
+
+def knobs_in_source() -> set:
+    knobs = set()
+    roots = [os.path.join(REPO, "src")]
+    files = [os.path.join(REPO, "tests", "conftest.py")]
+    for root in roots:
+        for dirpath, _, names in os.walk(root):
+            files += [os.path.join(dirpath, n) for n in names if n.endswith(".py")]
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            knobs |= set(KNOB_RE.findall(f.read()))
+    return knobs
+
+
+def check_knob_table(text: str) -> list:
+    problems = []
+    documented = set(TABLE_ROW_RE.findall(text))
+    actual = knobs_in_source()
+    for k in sorted(actual - documented):
+        problems.append(f"knob {k} is read in source but missing from the README table")
+    for k in sorted(documented - actual):
+        problems.append(f"knob {k} is in the README table but no source reads it")
+    if not documented:
+        problems.append("README knob table not found (no `| `RA_*` |` rows)")
+    return problems
+
+
+def run_python_blocks(text: str) -> list:
+    problems = []
+    blocks = BLOCK_RE.findall(text)
+    if not blocks:
+        return ["README has no ```python blocks to execute"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    for i, block in enumerate(blocks):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=f"_readme_block{i}.py", delete=False
+        ) as f:
+            f.write(block)
+            path = f.name
+        try:
+            proc = subprocess.run(
+                [sys.executable, path],
+                cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+            )
+            if proc.returncode != 0:
+                problems.append(
+                    f"README python block #{i + 1} failed "
+                    f"(exit {proc.returncode}):\n{proc.stderr.strip()[-2000:]}"
+                )
+        finally:
+            os.unlink(path)
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-blocks", action="store_true",
+                    help="only check the knob table (fast)")
+    args = ap.parse_args(argv)
+    with open(README, encoding="utf-8") as f:
+        text = f.read()
+    problems = check_knob_table(text)
+    if not args.skip_blocks:
+        problems += run_python_blocks(text)
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}", file=sys.stderr)
+        return 1
+    nblocks = len(BLOCK_RE.findall(text))
+    print(f"OK: README knob table matches source; {nblocks} python block(s) ran clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
