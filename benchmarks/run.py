@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|remote|compress|ingest|formats|images|pipeline|checkpoint|roofline")
+                   help="engine|remote|compress|ingest|device|formats|images|pipeline|checkpoint|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -47,8 +47,8 @@ def main(argv=None) -> None:
     wanted = (
         args.only.split(",")
         if args.only
-        else ["engine", "remote", "compress", "ingest", "formats", "images",
-              "pipeline", "checkpoint", "roofline"]
+        else ["engine", "remote", "compress", "ingest", "device", "formats",
+              "images", "pipeline", "checkpoint", "roofline"]
     )
 
     if "engine" in wanted:
@@ -71,6 +71,15 @@ def main(argv=None) -> None:
         _print_rows(rows)
         all_rows += rows
         print(f"# wrote {write_bench_ingest(rows)}")
+    if "device" in wanted:
+        # imported here: the device feed pulls in jax/pallas, which the pure
+        # I/O benches should not pay for
+        from benchmarks.bench_device import bench_device, write_bench_device
+
+        rows = bench_device(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_device(rows)}")
     if "formats" in wanted:
         rows = bench_formats(full=args.full)
         rows += derive_speedups(rows)

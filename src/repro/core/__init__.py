@@ -10,6 +10,7 @@ Public API mirrors the paper's reference implementations::
 
 from . import codec
 from . import engine
+from . import quant
 from .header import Header, decode_header, read_header
 from .io import (
     RaWriter,
@@ -23,9 +24,11 @@ from .io import (
     read,
     read_into,
     read_metadata,
+    read_quant_metadata,
     write,
     write_like,
 )
+from .quant import QuantInfo, decode_quant_metadata, quant_params, resolve_quant_spec
 from .sharded import (
     ShardedWriter,
     ShardIndex,
@@ -53,8 +56,14 @@ from .spec import (
 
 __all__ = [
     "Header",
+    "QuantInfo",
     "codec",
+    "decode_quant_metadata",
     "engine",
+    "quant",
+    "quant_params",
+    "read_quant_metadata",
+    "resolve_quant_spec",
     "read_header",
     "decode_header",
     "read",

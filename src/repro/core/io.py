@@ -32,6 +32,7 @@ remain local-only and refuse URLs.
 
 from __future__ import annotations
 
+import json
 import os
 import zlib
 from typing import Any, List, Optional, Sequence, Tuple, Union
@@ -40,6 +41,7 @@ import numpy as np
 
 from . import codec as chunked_codec
 from . import engine
+from . import quant as quant_schema
 from .header import Header, decode_header, read_header
 from .spec import (
     FLAG_BIG_ENDIAN,
@@ -107,8 +109,18 @@ def write(
     chunked: bool = False,
     codec: Optional[str] = None,
     chunk_bytes: Optional[int] = None,
+    quantize: Optional[str] = None,
 ) -> int:
     """Write ``arr`` as a RawArray file. Returns bytes written.
+
+    ``quantize="u8"`` (DESIGN.md §12) stores a float array as uint8 codes
+    with per-channel affine calibration over the last axis; the
+    ``(scale, bias, orig_dtype)`` schema rides in the trailing user
+    metadata (the paper's extension point), so ``read(..., dequantize=
+    True)`` — or the on-device Pallas kernel — reconstructs the logical
+    values while the wire/disk payload is 4× smaller than float32.
+    A caller-supplied ``metadata`` must then be a JSON object (bytes or
+    dict) for the quant schema to merge into.
 
     ``compress=True`` keeps the legacy whole-file zlib payload
     (``FLAG_ZLIB``: single-stream decode, no partial reads). ``chunked=True``
@@ -129,6 +141,27 @@ def write(
         raise RawArrayError(
             "compress= (whole-file zlib) and chunked= are mutually exclusive"
         )
+    if quantize is not None:
+        if big_endian:
+            raise RawArrayError("quantize= writes little-endian uint8 payloads only")
+        info = quant_schema.quant_params(np.asarray(arr), mode=quantize)
+        extra = None
+        if metadata:
+            if isinstance(metadata, dict):
+                extra = metadata
+            else:
+                try:
+                    extra = json.loads(metadata)
+                except (TypeError, ValueError, UnicodeDecodeError):
+                    extra = None
+            if not isinstance(extra, dict):
+                raise RawArrayError(
+                    "quantize= stores its schema in JSON metadata; a "
+                    "caller-supplied metadata blob must be a JSON object "
+                    "(bytes or dict)"
+                )
+        arr = info.quantize(np.asarray(arr))
+        metadata = info.encode(extra)
     orig_shape = np.asarray(arr).shape
     arr = np.ascontiguousarray(arr)  # NB: promotes 0-d to (1,)...
     arr = arr.reshape(orig_shape)    # ...so restore the true rank (ndims=0 is legal)
@@ -450,13 +483,25 @@ def read(
     *,
     with_metadata: bool = False,
     strict_flags: bool = True,
+    dequantize: bool = False,
 ) -> Union[np.ndarray, Tuple[np.ndarray, bytes]]:
     """Read a RawArray file into an ndarray (native little-endian in memory).
 
     Fast path: plain little-endian payload with no trailer reads the header
     from one small syscall and ``readinto``s the payload DIRECTLY into the
     output array (zero intermediate copy — what the C reference does with
-    fread into malloc'd memory)."""
+    fread into malloc'd memory).
+
+    ``dequantize=True`` reconstructs the logical float values of a file
+    written with ``quantize=`` (DESIGN.md §12) from its uint8 codes and the
+    typed quant metadata; files without quant metadata pass through
+    unchanged."""
+    if dequantize:
+        arr, meta = read(path, with_metadata=True, strict_flags=strict_flags)
+        info = quant_schema.decode_quant_metadata(meta)
+        if info is not None:
+            arr = info.dequantize(arr)
+        return (arr, meta) if with_metadata else arr
     if is_url(path):
         return _remote().remote_read(
             path, with_metadata=with_metadata, strict_flags=strict_flags
@@ -665,6 +710,14 @@ def read_metadata(path: PathLike) -> bytes:
     if hdr.flags & FLAG_CRC32_TRAILER:
         tail = tail[:-4]
     return tail
+
+
+def read_quant_metadata(path: PathLike):
+    """Typed view of a file's quantization schema (DESIGN.md §12): the
+    ``QuantInfo`` decoded from the trailing metadata, or ``None`` when the
+    file carries no ``"ra_quant"`` schema. Works locally and over URLs
+    (one header fetch + one tail range)."""
+    return quant_schema.decode_quant_metadata(read_metadata(path))
 
 
 def header_of(path: PathLike) -> Header:

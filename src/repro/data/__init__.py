@@ -10,7 +10,18 @@ __all__ = [
     "RaDatasetWriter",
     "dataset_manifest",
     "DataLoader",
+    "DeviceLoader",
     "LoaderState",
     "make_token_dataset",
     "make_image_dataset",
 ]
+
+
+def __getattr__(name):
+    # DeviceLoader pulls in jax; load it lazily so the numpy-only data plane
+    # (datasets, host loader) stays importable and fast without it
+    if name == "DeviceLoader":
+        from .device_loader import DeviceLoader
+
+        return DeviceLoader
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -72,6 +72,15 @@ class DatasetBuilder:
     WHILE samples arrive; readers then decode only the chunks overlapping
     each row request. Output is byte-identical to the pre-streaming writer
     (one monolithic ``ra.write`` per shard) for the same sample stream.
+
+    ``quantize={"field": spec}`` (DESIGN.md §12) stores a float field as
+    uint8 codes — 4× fewer disk/wire bytes — with the ``(scale, bias,
+    orig_dtype)`` schema in each shard file's RawArray metadata AND the
+    manifest, so readers dequantize on host (``DataLoader``) or on device
+    (``DeviceLoader`` via the fused Pallas kernel). ``spec`` is ``"u8"``
+    (calibration range [0, 1]), ``("u8", lo, hi)``, or a ``QuantInfo``;
+    streaming ingest needs the range declared up front, so out-of-range
+    samples saturate rather than rescaling.
     """
 
     def __init__(
@@ -84,6 +93,7 @@ class DatasetBuilder:
         chunked: bool = False,
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
+        quantize: Optional[Dict[str, Any]] = None,
     ):
         self.root = root
         self.fields = fields  # name -> (row_shape, dtype)
@@ -92,6 +102,22 @@ class DatasetBuilder:
         self.codec = codec
         self.chunk_bytes = chunk_bytes
         self.crc32 = crc32
+        self.quant: Dict[str, ra.QuantInfo] = {}
+        for name, spec in (quantize or {}).items():
+            if name not in fields:
+                raise ra.RawArrayError(f"quantize names unknown field {name!r}")
+            shape, dtype = fields[name]
+            if not np.issubdtype(np.dtype(dtype), np.floating):
+                raise ra.RawArrayError(
+                    f"quantize: field {name!r} is {dtype}, only float fields "
+                    f"can be stored quantized"
+                )
+            if len(shape) < 1:
+                raise ra.RawArrayError(
+                    f"quantize: field {name!r} has a scalar row shape; the "
+                    f"dequant kernel needs a channel (last) axis"
+                )
+            self.quant[name] = ra.resolve_quant_spec(spec, dtype=dtype)
         self._writers: Optional[Dict[str, ra.io.RaWriter]] = None
         self._shard_fill = 0  # rows in the open shard
         self._shards: List[Dict[str, Any]] = []
@@ -107,11 +133,17 @@ class DatasetBuilder:
         if self._writers is None:
             idx = len(self._shards)
             self._writers = {
+                # quantized fields store uint8 shard files carrying their
+                # dequant schema as RawArray metadata (self-describing even
+                # without the manifest)
                 name: ra.io.RaWriter(
                     os.path.join(self.root, f"{name}_{idx:05d}.ra"),
-                    np.dtype(dtype), tuple(shape),
+                    np.uint8 if name in self.quant else np.dtype(dtype),
+                    tuple(shape),
                     crc32=self.crc32, chunked=self.chunked,
                     codec=self.codec, chunk_bytes=self.chunk_bytes,
+                    metadata=(self.quant[name].encode()
+                              if name in self.quant else None),
                 )
                 for name, (shape, dtype) in self.fields.items()
             }
@@ -140,6 +172,8 @@ class DatasetBuilder:
             assert a.shape[1:] == tuple(shape), f"{name}: {a.shape} vs {shape}"
             n = a.shape[0] if n is None else n
             assert a.shape[0] == n
+            if name in self.quant:
+                a = self.quant[name].quantize(a)
             batch[name] = a
         pos = 0
         while pos < n:
@@ -170,8 +204,14 @@ class DatasetBuilder:
             self._writers = None
         man = {
             "format": "rawarray-dataset-v1",
+            # "dtype" stays the LOGICAL dtype; a "quant" sub-object marks the
+            # shard files as uint8 codes plus the dequant schema (§12)
             "fields": {
-                k: {"shape": list(s), "dtype": str(np.dtype(d))}
+                k: {
+                    "shape": list(s),
+                    "dtype": str(np.dtype(d)),
+                    **({"quant": self.quant[k].to_dict()} if k in self.quant else {}),
+                }
                 for k, (s, d) in self.fields.items()
             },
             "shards": self._shards,
@@ -238,6 +278,13 @@ class RaDataset:
             raise ra.RawArrayError(f"not a RawArray dataset: {root}")
         self.fields: Dict[str, Any] = man["fields"]
         self.metadata = man.get("metadata", {})
+        # typed quant schemas (DESIGN.md §12): shard files of these fields
+        # hold uint8 codes; consumers dequantize on host or on device
+        self.quant: Dict[str, ra.QuantInfo] = {
+            f: ra.QuantInfo.from_dict(info["quant"])
+            for f, info in self.fields.items()
+            if info.get("quant")
+        }
         self.shards: List[_Shard] = []
         off = 0
         for s in man["shards"]:
@@ -370,6 +417,20 @@ class RaDataset:
         return out
 
     def _field_spec(self, field: str) -> Tuple[Tuple[int, ...], np.dtype]:
+        return self.stored_spec(field)
+
+    def stored_spec(self, field: str) -> Tuple[Tuple[int, ...], np.dtype]:
+        """``(row_shape, dtype)`` of the bytes actually ON DISK for one
+        field — uint8 for quantized fields (DESIGN.md §12), the declared
+        dtype otherwise. All read planning (and loader staging buffers)
+        works in stored terms; dequantization happens at the consumer."""
+        info = self.fields[field]
+        dtype = np.dtype(np.uint8) if field in self.quant else np.dtype(info["dtype"])
+        return tuple(info["shape"]), dtype
+
+    def logical_spec(self, field: str) -> Tuple[Tuple[int, ...], np.dtype]:
+        """``(row_shape, dtype)`` a consumer sees AFTER dequantization —
+        the manifest's declared dtype."""
         info = self.fields[field]
         return tuple(info["shape"]), np.dtype(info["dtype"])
 
@@ -565,10 +626,8 @@ class RaDataset:
         shard_of = np.searchsorted(bounds, indices, side="right") - 1
         out: Dict[str, np.ndarray] = {}
         for f in fields:
-            field_info = self.fields[f]
-            sample = np.empty(
-                (len(indices),) + tuple(field_info["shape"]), dtype=field_info["dtype"]
-            )
+            rshape, dtype = self.stored_spec(f)
+            sample = np.empty((len(indices),) + rshape, dtype=dtype)
             for si in np.unique(shard_of):
                 mask = shard_of == si
                 local = indices[mask] - self.shards[si].row_offset

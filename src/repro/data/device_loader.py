@@ -1,0 +1,301 @@
+"""Device feed plane: prefetch-to-device loader with on-device dequant
+(DESIGN.md §12).
+
+The host ``DataLoader`` ends at numpy batches in host RAM; a train step
+then pays host→device transfer *inside* its critical path, and the
+paper's read-bandwidth win evaporates at the device boundary.
+``DeviceLoader`` closes that gap:
+
+* a feeder thread pulls host batches (the loader's prefetch ring is the
+  staging buffer) and ``jax.device_put``s every field, keeping up to
+  ``RA_DEVICE_BUFS`` (default 2) batches RESIDENT ON DEVICE — so host
+  gather, staging-buffer fill, and the H2D copy all overlap the running
+  train step;
+* quantized fields (DESIGN.md §12) cross the PCIe/ICI link as uint8 —
+  4× fewer bytes than float32 — and are decoded ON DEVICE by the fused
+  Pallas kernel ``repro.kernels.ops.dequant_u8`` (one HBM read of the u8
+  codes, fused ``q*scale + bias``); the wrapped loader's host-side
+  dequantization is turned off automatically;
+* ``stats()`` folds ``h2d_s`` (time inside device transfers), ``h2d_bytes``
+  (bytes actually moved) and ``device_wait_s`` (consumer starved on the
+  device queue) into the wrapped loader's counters, so the train loop's
+  straggler monitor sees the whole feed path.
+
+Safety: the feeder blocks until each transfer completes before pulling the
+next host batch, so the wrapped loader's ``reuse_buffers`` ring is never
+overwritten mid-copy; device batches are immutable ``jax.Array``s. The
+dequant kernel is dispatched on the feeder thread too — decode belongs to
+the feed pipeline, leaving the consumer's critical path as nothing but a
+queue pop and its train step (jax compiled-function execution is
+thread-safe). Producer errors are sticky exactly like the host loader's:
+every ``next()`` after a failure re-raises instead of hanging.
+
+Usage (flag-gated in ``repro.launch.train`` via ``--device-feed``)::
+
+    loader = DeviceLoader(DataLoader(RaDataset(root), batch, ...))
+    batch = next(loader)        # fields are jax.Arrays, already on device
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from ..core.spec import RawArrayError, env_int
+from .loader import DataLoader, LoaderState
+
+
+def default_device_bufs() -> int:
+    """Device-resident batch depth (knob ``RA_DEVICE_BUFS``, default 2)."""
+    return max(1, env_int("RA_DEVICE_BUFS", 2))
+
+
+class DeviceLoader:
+    """Wrap a ``DataLoader`` so consumers receive device-resident batches.
+
+    ``bufs`` device batches (knob ``RA_DEVICE_BUFS``) are kept in flight;
+    quantized fields are moved as uint8 and dequantized on device with the
+    fused Pallas kernel (DESIGN.md §12). The wrapped loader must not have
+    started iterating yet (its prefetch pipeline is reconfigured here).
+    """
+
+    def __init__(
+        self,
+        loader: DataLoader,
+        *,
+        bufs: Optional[int] = None,
+        device: Any = None,
+        interpret: Optional[bool] = None,
+        block_rows: Optional[int] = None,
+    ):
+        import jax  # deferred: keep `repro.data` importable without jax
+
+        if loader._q is not None or loader._thread is not None:
+            raise RawArrayError(
+                "DeviceLoader must wrap a DataLoader that has not started "
+                "iterating (stop() it first)"
+            )
+        self._jax = jax
+        self.loader = loader
+        # device decode replaces host decode: raw uint8 over the wire
+        loader.dequant = False
+        self.bufs = max(1, bufs if bufs is not None else default_device_bufs())
+        self.device = device
+        self._interpret = interpret
+        self._block_rows = block_rows
+        self._quant_dev: Dict[str, Tuple[Any, Any, np.dtype]] = {}
+        self._h2d_s = 0.0
+        self._h2d_bytes = 0
+        self._h2d_n = 0
+        self._wait_s = 0.0
+        self._n_batches = 0
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
+
+    # ---- quantized-field kernel parameters ---------------------------------
+    def _quant_params(self) -> Dict[str, Tuple[Any, Any, np.dtype]]:
+        """Per-field ``(scale, bias, out_dtype)`` with scale/bias already on
+        device, built once: the dequant kernel wants ``(C,)`` float32 for
+        the last axis of each quantized field."""
+        if not self._quant_dev:
+            for f, info in getattr(self.loader.ds, "quant", {}).items():
+                shape, _ = self.loader.ds.logical_spec(f)
+                if not shape:
+                    raise RawArrayError(
+                        f"quantized field {f!r} has a scalar row shape"
+                    )
+                scale, bias = info.channel_params(int(shape[-1]))
+                self._quant_dev[f] = (
+                    self._jax.device_put(scale, self.device),
+                    self._jax.device_put(bias, self.device),
+                    np.dtype(info.orig_dtype),
+                )
+        return self._quant_dev
+
+    # ---- feeder thread ------------------------------------------------------
+    def _start(self) -> None:
+        jax = self._jax
+        q = self._q = queue.Queue(maxsize=self.bufs)
+        stop = self._stop = threading.Event()
+        self._exc = None
+        dev = self.device
+        # captured by value: a zombie feeder that outlives its join timeout
+        # keeps THIS loader object even after stop() swaps in a fresh one,
+        # so it can never steal batches from (or poison the sticky-error
+        # state of) a restarted pipeline
+        loader = self.loader
+
+        # device_put MAY alias host memory zero-copy (the CPU backend does
+        # for aligned arrays): with a reused staging ring the bytes must be
+        # detached first or the "device" batch changes under the consumer
+        # when the ring recycles
+        detach = bool(getattr(self.loader, "reuse_buffers", False))
+
+        def run():
+            while not stop.is_set():
+                try:
+                    batch = next(loader)
+                    state = batch.pop("_state", None)
+                    t0 = time.perf_counter()
+                    moved = {
+                        k: jax.device_put(
+                            np.array(v, copy=True) if detach else v, dev
+                        )
+                        for k, v in batch.items()
+                    }
+                    # the transfer must COMPLETE before the next host batch
+                    # may recycle the staging ring buffer under it
+                    jax.block_until_ready(list(moved.values()))
+                    self._h2d_s += time.perf_counter() - t0
+                    self._h2d_bytes += sum(
+                        int(v.nbytes) for v in batch.values()
+                    )
+                    self._h2d_n += 1
+                    # on-device decode is part of the FEED pipeline: dispatch
+                    # the fused dequant here so the consumer's critical path
+                    # is nothing but q.get() + its train step
+                    self._dequant_on_device(moved)
+                    item: Any = (moved, state)
+                except Exception as e:  # surface in consumer (sticky there)
+                    item = e
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+                if isinstance(item, Exception):
+                    return
+
+        self._thread = threading.Thread(target=run, daemon=True, name="ra-h2d")
+        self._thread.start()
+
+    # ---- iteration ----------------------------------------------------------
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        return self
+
+    def _dequant_on_device(self, moved: Dict[str, Any]) -> None:
+        """Decode quantized fields in place with the fused Pallas kernel
+        (uint8 in HBM → float out; DESIGN.md §12). Runs on the feeder
+        thread — dispatch and execution overlap the consumer's train step;
+        jax compiled-function execution is thread-safe."""
+        quant = self._quant_params()
+        if not quant:
+            return
+        from ..kernels import ops  # deferred: pallas import is heavy
+
+        for f, (scale, bias, out_dtype) in quant.items():
+            if f in moved:
+                x = moved[f]
+                rows = int(np.prod(x.shape[:-1], dtype=np.int64)) or 1
+                # bound the grid to ~8 row blocks: fewer, larger tiles
+                # amortize per-block overhead (interpret mode especially)
+                br = self._block_rows or max(256, -(-rows // 8))
+                moved[f] = ops.dequant_u8(
+                    x, scale, bias, out_dtype=out_dtype,
+                    block_rows=br, interpret=self._interpret,
+                )
+
+    def __next__(self) -> Dict[str, Any]:
+        if self._exc is not None:
+            raise self._exc  # sticky, same contract as DataLoader.__next__
+        if self._q is None:
+            self._start()
+        t0 = time.perf_counter()
+        item = self._q.get()
+        self._wait_s += time.perf_counter() - t0
+        if isinstance(item, Exception):
+            self._exc = item
+            raise item
+        moved, state = item
+        moved["_state"] = state
+        self._n_batches += 1
+        return moved
+
+    # ---- lifecycle ----------------------------------------------------------
+    def stop(self) -> None:
+        """Stop the feeder and VERIFY it exited, then stop the wrapped
+        loader. A feeder wedged past the join timeout (blocked inside the
+        wrapped loader) keeps only its captured references: the wrapped
+        loader is REPLACED with an equivalent fresh one, so the zombie can
+        never steal a batch from — or stick a stale error onto — a
+        restarted pipeline."""
+        self._stop.set()
+        if self._q is not None:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            if self._thread.is_alive():
+                self.loader = self._detached_clone(self.loader)
+        self._q = None
+        self._thread = None
+        self._exc = None
+        self.loader.stop()
+
+    @staticmethod
+    def _detached_clone(old: DataLoader) -> DataLoader:
+        """A fresh DataLoader equivalent to ``old`` (same dataset, order,
+        position) sharing none of its queues, events, or buffers; ``old``
+        stays with the zombie feeder that still references it."""
+        old_q = old._q
+        old.stop()  # best-effort: signals old's own producer too
+        if old_q is not None:
+            # wake a feeder blocked in old.__next__'s q.get(): the sentinel
+            # error makes next() raise, and the feeder's (set) stop event
+            # then ends the thread instead of leaking it on an orphaned get
+            try:
+                old_q.put_nowait(
+                    RawArrayError("loader detached from a wedged device feeder")
+                )
+            except queue.Full:
+                pass
+        new = DataLoader(
+            old.ds, old.batch_size, seed=old.seed, shuffle=old.shuffle,
+            host_id=old.host_id, host_count=old.host_count,
+            prefetch=old.prefetch, reuse_buffers=old.reuse_buffers,
+            naive=old.naive, dequant=old.dequant,
+        )
+        new.state = LoaderState(old.state.epoch, old.state.step)
+        return new
+
+    def restore(self, state: LoaderState) -> None:
+        """Resume exactly after the batch ``state`` describes (drains the
+        device pipeline, then delegates to the wrapped loader)."""
+        self.stop()
+        self.loader.restore(state)
+
+    def steps_per_epoch(self) -> int:
+        return self.loader.steps_per_epoch()
+
+    @property
+    def ds(self):
+        return self.loader.ds
+
+    @property
+    def state(self) -> LoaderState:
+        return self.loader.state
+
+    def stats(self) -> Dict[str, float]:
+        """Wrapped loader counters plus the device feed's: ``h2d_s`` (time
+        inside host→device transfers), ``h2d_bytes`` (bytes moved — 4×
+        smaller for quantized fields), ``device_wait_s`` (consumer starved
+        on the device queue: the straggler signal), ``device_batches``."""
+        out = dict(self.loader.stats())
+        out.update(
+            h2d_s=self._h2d_s,
+            h2d_bytes=float(self._h2d_bytes),
+            h2d_batches=float(self._h2d_n),  # feeder runs ahead of consumer
+            device_wait_s=self._wait_s,
+            device_batches=float(self._n_batches),
+        )
+        return out

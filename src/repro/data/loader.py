@@ -21,6 +21,16 @@
   block cache sized to the working set, epoch 2+ is served from RAM.
   ``stats()`` then also reports the cache hit/miss/eviction counters.
   The ``naive=True`` baseline indexes local mmaps and is refused remotely.
+* **Quantized fields** (DESIGN.md §12): fields stored as uint8 codes are
+  dequantized on host by default (``dequant=True``) so consumers see the
+  logical float batches; ``DeviceLoader`` wraps a ``dequant=False`` loader
+  and moves the 4×-smaller uint8 bytes to the device instead, decoding
+  there with the fused Pallas kernel.
+* **Failure semantics**: a producer error is STICKY — every subsequent
+  ``next()`` re-raises it (never a hang on a dead prefetch thread), and
+  ``stop()`` verifies the producer actually exited before the buffer ring
+  may be handed to a successor (a zombie thread can never alias batches a
+  restarted loader emits).
 """
 
 from __future__ import annotations
@@ -63,6 +73,7 @@ class DataLoader:
         drop_last: bool = True,
         reuse_buffers: bool = False,
         naive: bool = False,
+        dequant: bool = True,
     ):
         if not drop_last:
             raise NotImplementedError("fixed-shape training wants drop_last")
@@ -83,15 +94,20 @@ class DataLoader:
         self._qcap = max(1, prefetch)
         self.reuse_buffers = reuse_buffers and not naive
         self.naive = naive  # seed-era produce path (benchmark baseline)
+        # host-side dequantization of quantized fields (DESIGN.md §12);
+        # DeviceLoader turns this off and decodes on device instead
+        self.dequant = dequant
         self._ring: list = []  # preallocated batch dicts when reuse_buffers
-        self._ring_pos = 0
         self.state = LoaderState()
         self._wait_s = 0.0
         self._produce_s = 0.0
         self._n_batches = 0
         self._thread: Optional[threading.Thread] = None
         self._q: Optional[queue.Queue] = None
+        # fresh Event per prefetch thread (see _start_prefetch): stop() of a
+        # wedged producer must not be undone by the next start's clear()
         self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None  # sticky producer error
 
     # ---- order ------------------------------------------------------------
     def _host_rows(self) -> np.ndarray:
@@ -108,35 +124,47 @@ class DataLoader:
     def _cached_order(self, epoch: int) -> np.ndarray:
         """The permutation is a pure function of (seed, epoch): compute it
         once per epoch, not once per batch (the seed path recomputed it every
-        ``_produce`` — measurable at high batch rates)."""
+        ``_produce`` — measurable at high batch rates). Returns the LOCAL
+        tuple's order, so a concurrent caller on another epoch (a zombie
+        producer racing its successor) can't swap the memo underneath us."""
         cached = getattr(self, "_order_memo", None)
         if cached is None or cached[0] != epoch:
-            self._order_memo = (epoch, self._epoch_order(epoch))
-        return self._order_memo[1]
+            cached = (epoch, self._epoch_order(epoch))
+            self._order_memo = cached
+        return cached[1]
 
     def steps_per_epoch(self) -> int:
         return len(self._host_rows()) // self.batch_size
 
     # ---- synchronous iteration ---------------------------------------------
-    def _next_buffer(self) -> Optional[Dict[str, np.ndarray]]:
-        """Round-robin over qcap+2 preallocated batch dicts: one held by
-        the consumer, up to ``qcap`` queued, one being filled."""
-        if not self.reuse_buffers:
-            return None
-        if not self._ring:
-            nbufs = self._qcap + 2
-            for _ in range(nbufs):
-                self._ring.append(
-                    {
-                        f: np.empty((self.batch_size,) + tuple(i["shape"]), i["dtype"])
-                        for f, i in self.ds.fields.items()
-                    }
-                )
-        buf = self._ring[self._ring_pos % len(self._ring)]
-        self._ring_pos += 1
-        return buf
+    def _make_ring(self) -> list:
+        """qcap+2 preallocated batch dicts (stored dtypes): one held by the
+        consumer, up to ``qcap`` queued, one being filled. Built on the
+        consumer thread BEFORE the producer starts, and handed to it by
+        reference — a zombie producer that outlived its join keeps its own
+        (discarded) ring object and can never touch a successor's."""
+        nbufs = self._qcap + 2
+        specs = {f: self._stored_spec(f) for f in self.ds.fields}
+        return [
+            {
+                f: np.empty((self.batch_size,) + shape, dtype)
+                for f, (shape, dtype) in specs.items()
+            }
+            for _ in range(nbufs)
+        ]
 
-    def _produce(self, epoch: int, step: int) -> Dict[str, np.ndarray]:
+    def _stored_spec(self, field: str):
+        """Stored (on-disk) row spec — uint8 for quantized fields; staging
+        buffers and reads are planned in stored terms (DESIGN.md §12)."""
+        spec = getattr(self.ds, "stored_spec", None)
+        if spec is not None:
+            return spec(field)
+        info = self.ds.fields[field]
+        return tuple(info["shape"]), np.dtype(info["dtype"])
+
+    def _produce(
+        self, epoch: int, step: int, out: Optional[Dict[str, np.ndarray]] = None
+    ) -> Dict[str, np.ndarray]:
         if self.naive:
             order = self._epoch_order(epoch)  # seed behavior: fresh every batch
         else:
@@ -144,16 +172,28 @@ class DataLoader:
         lo = step * self.batch_size
         idx = order[lo : lo + self.batch_size]
         if self.naive and self.shuffle:
-            return self.ds.gather_naive(idx)
-        out = self._next_buffer()
-        if self.shuffle:
-            return self.ds.gather(idx, out=out)
-        return self.ds.rows(int(idx[0]), int(idx[-1]) + 1, out=out)
+            batch = self.ds.gather_naive(idx)
+        elif self.shuffle:
+            batch = self.ds.gather(idx, out=out)
+        else:
+            batch = self.ds.rows(int(idx[0]), int(idx[-1]) + 1, out=out)
+        if self.dequant:
+            for f, info in getattr(self.ds, "quant", {}).items():
+                if f in batch:
+                    # float32 affine decode — allocates a fresh logical array,
+                    # so the emitted field never aliases the uint8 ring
+                    batch[f] = info.dequantize(batch[f])
+        return batch
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self
 
     def __next__(self) -> Dict[str, np.ndarray]:
+        if self._exc is not None:
+            # sticky: the prefetch thread put ONE exception and exited — a
+            # second get() would block forever on the empty queue, so every
+            # subsequent next() re-raises instead (restart via stop()/restore)
+            raise self._exc
         if self._q is None:
             self._start_prefetch()
         t0 = time.perf_counter()
@@ -161,32 +201,53 @@ class DataLoader:
         self._wait_s += time.perf_counter() - t0
         self._n_batches += 1
         if isinstance(batch, Exception):
+            self._exc = batch
             raise batch
         return batch
 
     # ---- prefetch thread ---------------------------------------------------
     def _start_prefetch(self) -> None:
-        self._q = queue.Queue(maxsize=self._qcap)
-        self._stop.clear()
+        # the queue AND the stop event are private to this thread (captured
+        # by closure, not read back off self): a zombie predecessor that
+        # outlived its join timeout can neither be revived by this clear-less
+        # start nor push a stale batch into the new queue
+        q = self._q = queue.Queue(maxsize=self._qcap)
+        stop = self._stop = threading.Event()
+        self._exc = None
+        ring: Optional[list] = None
+        if self.reuse_buffers:
+            if not self._ring:
+                self._ring = self._make_ring()
+            ring = self._ring
 
         def run():
             spe = self.steps_per_epoch()
             epoch, step = self.state.epoch, self.state.step
-            while not self._stop.is_set():
+            pos = 0
+            while not stop.is_set():
                 if step >= spe:
                     epoch, step = epoch + 1, 0
                 try:
                     t0 = time.perf_counter()
-                    b = self._produce(epoch, step)
+                    buf = None
+                    if ring is not None:
+                        buf = ring[pos % len(ring)]
+                        pos += 1
+                    b = self._produce(epoch, step, buf)
                     self._produce_s += time.perf_counter() - t0
-                except Exception as e:  # surface in consumer
-                    self._q.put(e)
+                except Exception as e:  # surface in consumer (sticky there)
+                    while not stop.is_set():
+                        try:
+                            q.put(e, timeout=0.2)
+                            break
+                        except queue.Full:
+                            continue
                     return
                 b["_state"] = LoaderState(epoch, step)
                 step += 1
-                while not self._stop.is_set():
+                while not stop.is_set():
                     try:
-                        self._q.put(b, timeout=0.2)
+                        q.put(b, timeout=0.2)
                         break
                     except queue.Full:
                         continue
@@ -202,7 +263,13 @@ class DataLoader:
         if self.state.step >= spe:
             self.state = LoaderState(state.epoch + 1, 0)
 
-    def stop(self) -> None:
+    def stop(self, join_timeout: float = 2.0) -> None:
+        """Stop the prefetch thread and VERIFY it exited. If the join times
+        out (a producer wedged in a slow read), the buffer ring is discarded
+        so the zombie can never write into buffers a restarted loader hands
+        out — the successor allocates a fresh ring; the zombie's private
+        stop event stays set and its queue is orphaned, so the worst it can
+        do is finish one produce into memory nobody reads."""
         self._stop.set()
         if self._q is not None:
             try:
@@ -211,9 +278,14 @@ class DataLoader:
             except queue.Empty:
                 pass
         if self._thread is not None:
-            self._thread.join(timeout=2.0)
+            self._thread.join(timeout=join_timeout)
+            if self._thread.is_alive():
+                # zombie still running: it may be mid-_produce into the ring,
+                # so orphan it — the next start allocates fresh buffers
+                self._ring = []
         self._q = None
         self._thread = None
+        self._exc = None
 
     def stats(self) -> Dict[str, float]:
         out = {

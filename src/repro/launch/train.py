@@ -24,6 +24,17 @@ def main(argv=None) -> int:
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--fresh", action="store_true")
+    p.add_argument(
+        "--device-feed", action="store_true",
+        help="wrap the loader in DeviceLoader (DESIGN.md §12): keep "
+             "RA_DEVICE_BUFS batches resident on device, overlapping host "
+             "read + H2D with the train step; quantized fields decode "
+             "on-device via the fused Pallas kernel",
+    )
+    p.add_argument(
+        "--device-bufs", type=int, default=None,
+        help="device-resident batch depth (default: RA_DEVICE_BUFS or 2)",
+    )
     args = p.parse_args(argv)
 
     from repro.configs import get_config
@@ -38,8 +49,13 @@ def main(argv=None) -> int:
     if not os.path.exists(os.path.join(ds_root, "manifest.json")):
         make_token_dataset(ds_root, n_docs=2048, seq_len=min(256, cfg.max_seq), vocab=cfg.vocab)
     # reuse_buffers is safe here: the train loop copies each batch to device
-    # (jnp.asarray) before requesting the next one
+    # (jnp.asarray) before requesting the next one; with --device-feed the
+    # DeviceLoader's feeder confirms each transfer before recycling the ring
     loader = DataLoader(RaDataset(ds_root), args.batch, seed=args.seed, reuse_buffers=True)
+    if args.device_feed:
+        from repro.data import DeviceLoader
+
+        loader = DeviceLoader(loader, bufs=args.device_bufs)
     out = train(
         build_model(cfg),
         loader,

@@ -22,6 +22,7 @@ accept URLs.
 
 from .cache import BlockCache, reset_shared_cache, shared_cache
 from .client import (
+    RemoteAuthError,
     RemoteReader,
     RemoteWriter,
     close_readers,
@@ -40,6 +41,7 @@ from .server import ArrayServer, serve
 __all__ = [
     "ArrayServer",
     "BlockCache",
+    "RemoteAuthError",
     "RemoteReader",
     "RemoteWriter",
     "close_readers",

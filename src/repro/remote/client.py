@@ -57,6 +57,24 @@ from ..core.spec import (
 from .cache import BlockCache, shared_cache
 
 
+class RemoteAuthError(RawArrayError):
+    """The server refused the request for AUTH reasons (HTTP 401/403,
+    the PR token-auth plane of DESIGN.md §11). Deliberately distinct from
+    transient transport failures: retrying a rejected credential can never
+    succeed, so every retry loop in this module fails fast on it instead of
+    burning its retry budget as if the error were transient."""
+
+
+def _raise_for_auth(status: int, url: str, what: str) -> None:
+    """Fail fast on 401/403 — wrong or missing bearer token is permanent."""
+    if status in (401, 403):
+        raise RemoteAuthError(
+            f"{what} {url} refused by server auth: HTTP {status} "
+            f"(check the bearer token — RA_REMOTE_TOKEN or token=; "
+            f"not retried: credential errors are not transient)"
+        )
+
+
 def default_conns() -> int:
     """Connection-pool width per reader (knob ``RA_REMOTE_CONNS``)."""
     return max(1, _env_int("RA_REMOTE_CONNS", 8))
@@ -192,6 +210,7 @@ class RemoteReader:
                 resp.read()  # HEAD has no body; settle the connection state
                 if resp.status != 200:
                     self._pool.release(conn)
+                    _raise_for_auth(resp.status, self.url, "stat of")
                     raise RawArrayError(
                         f"remote stat failed: HTTP {resp.status} for {self.url}"
                     )
@@ -224,6 +243,7 @@ class RemoteReader:
                 try:
                     whole = resp.status == 200 and offset == 0 and length == self.size
                     if resp.status != 206 and not whole:
+                        _raise_for_auth(resp.status, self.url, "ranged read of")
                         raise RawArrayError(
                             f"range [{offset}, {offset + length}) of {self.url} "
                             f"not satisfiable: HTTP {resp.status}"
@@ -457,6 +477,7 @@ def fetch_bytes(url: str, *, timeout: Optional[float] = None, retries: int = 2) 
             resp = conn.getresponse()
             body = resp.read()
             if resp.status != 200:
+                _raise_for_auth(resp.status, url, "GET of")
                 raise RawArrayError(f"GET {url} failed: HTTP {resp.status}")
             return body
         except (OSError, http.client.HTTPException) as e:
@@ -525,6 +546,9 @@ def _put(
             c.request("PUT", path, body=iter(views), headers=hdrs)
             resp = c.getresponse()
             body = resp.read()
+            if resp.status in (401, 403):
+                c.close()
+                _raise_for_auth(resp.status, url, "upload to")
             return resp.status, body, c
         except (OSError, http.client.HTTPException) as e:
             try:

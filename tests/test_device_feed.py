@@ -1,0 +1,409 @@
+"""Device feed plane (DESIGN.md §12): DeviceLoader↔DataLoader equivalence,
+u8 quantize/dequant roundtrips (interpret-mode Pallas on CPU), and the
+loader-lifecycle fixes — sticky producer errors and the stop()/restore()
+zombie-ring race."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as ra
+from repro.data import (
+    DataLoader,
+    DatasetBuilder,
+    DeviceLoader,
+    LoaderState,
+    RaDataset,
+    make_token_dataset,
+)
+
+
+@pytest.fixture(scope="module")
+def token_root(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("dfeed") / "toks")
+    make_token_dataset(root, n_docs=256, seq_len=16, vocab=64, shard_rows=100)
+    return root
+
+
+@pytest.fixture(scope="module")
+def quant_root(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("dfeed") / "imgs")
+    rng = np.random.default_rng(0)
+    b = DatasetBuilder(
+        root,
+        {"image": ((6, 6, 3), "float32"), "label": ((), "int32")},
+        shard_rows=96,
+        quantize={"image": "u8"},
+    )
+    b.append(
+        image=rng.random((250, 6, 6, 3)).astype(np.float32),
+        label=rng.integers(0, 10, 250).astype(np.int32),
+    )
+    b.finish()
+    return root
+
+
+# ------------------------------------------------ bugfix: sticky producer error
+def test_dead_producer_error_is_sticky(token_root):
+    """The prefetch thread puts ONE exception and exits; before the fix the
+    second next() blocked forever on the empty queue. Now every subsequent
+    next() re-raises."""
+    dl = DataLoader(RaDataset(token_root), 16, seed=0)
+    boom = RuntimeError("disk on fire")
+
+    def bad_produce(epoch, step, out=None):
+        raise boom
+
+    dl._produce = bad_produce
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        next(dl)
+    # the regression hung here forever — any completion at all is the fix,
+    # and it must be the SAME error, immediately
+    t0 = time.perf_counter()
+    for _ in range(3):
+        with pytest.raises(RuntimeError, match="disk on fire"):
+            next(dl)
+    assert time.perf_counter() - t0 < 1.0
+    dl.stop()
+
+
+def test_error_cleared_by_stop_then_restart(token_root):
+    dl = DataLoader(RaDataset(token_root), 16, seed=0)
+    orig = DataLoader._produce.__get__(dl)
+    dl._produce = lambda e, s, out=None: (_ for _ in ()).throw(ValueError("x"))
+    with pytest.raises(ValueError):
+        next(dl)
+    dl.stop()
+    del dl._produce  # restore the class implementation
+    assert "tokens" in next(dl)
+    dl.stop()
+    assert orig is not None
+
+
+def test_device_loader_error_is_sticky(token_root):
+    dl = DataLoader(RaDataset(token_root), 16, seed=0)
+    dl._produce = lambda e, s, out=None: (_ for _ in ()).throw(OSError("gone"))
+    dev = DeviceLoader(dl)
+    with pytest.raises(OSError, match="gone"):
+        next(dev)
+    with pytest.raises(OSError, match="gone"):
+        next(dev)  # sticky through the device pipeline too
+    dev.stop()
+
+
+# --------------------------------------- bugfix: stop()/restore() zombie ring
+def test_stop_verifies_join_and_discards_ring(token_root):
+    """A producer wedged past the join timeout must not leave its ring to a
+    successor: stop() discards the buffers so the restarted loader can
+    never alias batches with the zombie."""
+    dl = DataLoader(RaDataset(token_root), 16, seed=1, reuse_buffers=True,
+                    prefetch=1)
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = DataLoader._produce.__get__(dl)
+
+    def wedged(epoch, step, out=None):
+        entered.set()
+        gate.wait()
+        return orig(epoch, step, out)
+
+    dl._produce = wedged
+    dl._start_prefetch()
+    assert entered.wait(5.0)
+    old_ring = dl._ring
+    zombie = dl._thread
+    assert old_ring  # allocated by _start_prefetch
+    dl.stop(join_timeout=0.2)  # zombie ignores the stop: join must time out
+    assert zombie.is_alive()
+    assert dl._ring == []  # the ring went with it
+
+    # restart: fresh ring, and the zombie's eventual write lands in the
+    # orphaned buffers, not in anything the new loader emits (compare one
+    # batch at a time — emitted batches alias the live ring by contract)
+    del dl._produce
+    ref = DataLoader(RaDataset(token_root), 16, seed=1)
+    for i in range(6):
+        if i == 3:
+            gate.set()  # let the zombie finish its produce mid-iteration
+        b, r = next(dl), next(ref)
+        assert np.array_equal(b["tokens"], r["tokens"]), i
+        assert b["_state"].__dict__ == r["_state"].__dict__
+    assert dl._ring and dl._ring is not old_ring
+    zombie.join(timeout=5.0)
+    assert not zombie.is_alive()  # its private stop event was left set
+    dl.stop()
+    ref.stop()
+
+
+def test_clean_stop_keeps_ring(token_root):
+    dl = DataLoader(RaDataset(token_root), 16, seed=2, reuse_buffers=True)
+    next(dl)
+    ring = dl._ring
+    assert ring
+    dl.stop()
+    assert dl._ring is ring  # healthy join: buffers are reusable
+
+
+def test_restore_after_wedged_stop_is_exact(token_root):
+    """restore() goes through stop(): even with a wedged producer the
+    resumed sequence is exactly the reference sequence."""
+    ref = DataLoader(RaDataset(token_root), 16, seed=3)
+    batches = [next(ref) for _ in range(5)]
+    ref.stop()
+
+    dl = DataLoader(RaDataset(token_root), 16, seed=3, reuse_buffers=True)
+    [next(dl) for _ in range(3)]
+    gate = threading.Event()
+    orig = DataLoader._produce.__get__(dl)
+    dl._produce = lambda e, s, out=None: (gate.wait(), orig(e, s, out))[1]
+    time.sleep(0.05)  # let the producer enter the wedge
+    dl.restore(batches[2]["_state"])  # join may time out; ring discarded
+    del dl._produce
+    gate.set()
+    nxt = next(dl)
+    assert nxt["_state"].__dict__ == batches[3]["_state"].__dict__
+    assert np.array_equal(nxt["tokens"], batches[3]["tokens"])
+    dl.stop()
+
+
+# ------------------------------------------------- quantize/dequant roundtrip
+def test_write_quantize_u8_roundtrip(tmp_path):
+    x = np.random.default_rng(0).normal(size=(64, 5)).astype(np.float32)
+    p = str(tmp_path / "q.ra")
+    ra.write(p, x, quantize="u8")
+    hdr = ra.header_of(p)
+    assert hdr.dtype() == np.uint8 and hdr.shape == (64, 5)
+    info = ra.read_quant_metadata(p)
+    assert info is not None and info.mode == "u8"
+    assert info.orig_dtype == "float32" and info.scale.shape == (5,)
+    y = ra.read(p, dequantize=True)
+    assert y.dtype == np.float32
+    # affine u8: error bounded by half a step per channel
+    assert (np.abs(y - x) <= info.scale / 2 + 1e-6).all()
+    # without dequantize the codes come back raw
+    assert ra.read(p).dtype == np.uint8
+
+
+def test_write_quantize_exact_on_u8_grid(tmp_path):
+    """Values already on the u8 grid of the calibrated range roundtrip
+    EXACTLY (the image-pixel case). Pin the per-channel calibration to
+    [0, 255] by including both extremes in every channel."""
+    codes = np.random.default_rng(1).integers(0, 256, (32, 4), dtype=np.uint8)
+    codes[0] = 0
+    codes[1] = 255
+    x = codes.astype(np.float32)  # range [0, 255], step 1 -> scale exactly 1
+    p = str(tmp_path / "g.ra")
+    ra.write(p, x, quantize="u8")
+    info = ra.read_quant_metadata(p)
+    assert np.array_equal(info.scale, np.ones(4, np.float32))
+    assert np.array_equal(ra.read(p, dequantize=True), x)
+
+
+def test_quantize_merges_user_metadata(tmp_path):
+    p = str(tmp_path / "m.ra")
+    ra.write(p, np.ones((4, 2), np.float32), quantize="u8",
+             metadata=b'{"units": "mm"}')
+    import json
+
+    meta = json.loads(ra.read_metadata(p))
+    assert meta["units"] == "mm" and "ra_quant" in meta
+    with pytest.raises(ra.RawArrayError, match="JSON object"):
+        ra.write(p, np.ones((4, 2), np.float32), quantize="u8", metadata=b"\xff\x00")
+
+
+def test_quantize_rejects_bad_inputs(tmp_path):
+    with pytest.raises(ra.RawArrayError, match="float"):
+        ra.write(str(tmp_path / "i.ra"), np.ones((4,), np.int32), quantize="u8")
+    with pytest.raises(ra.RawArrayError, match="0-d"):
+        ra.write(str(tmp_path / "z.ra"), np.float32(1.0), quantize="u8")
+    with pytest.raises(ra.RawArrayError, match="unknown quantization mode"):
+        ra.quant_params(np.ones((4,), np.float32), mode="u4")
+
+
+def test_builder_quantize_validation(tmp_path):
+    fields = {"x": ((4,), "float32"), "lab": ((), "int32")}
+    with pytest.raises(ra.RawArrayError, match="unknown field"):
+        DatasetBuilder(str(tmp_path / "a"), fields, quantize={"nope": "u8"})
+    with pytest.raises(ra.RawArrayError, match="float"):
+        DatasetBuilder(str(tmp_path / "b"), fields, quantize={"lab": "u8"})
+    with pytest.raises(ra.RawArrayError, match="scalar row shape"):
+        DatasetBuilder(str(tmp_path / "c"), {"s": ((), "float32")},
+                       quantize={"s": "u8"})
+    with pytest.raises(ra.RawArrayError, match="hi > lo"):
+        ra.resolve_quant_spec(("u8", 2.0, 1.0))
+
+
+def test_quantized_dataset_schema_and_shards(quant_root):
+    ds = RaDataset(quant_root)
+    assert set(ds.quant) == {"image"}
+    assert ds.stored_spec("image") == ((6, 6, 3), np.dtype(np.uint8))
+    assert ds.logical_spec("image") == ((6, 6, 3), np.dtype(np.float32))
+    assert ds.fields["image"]["dtype"] == "float32"  # manifest stays logical
+    # raw reads serve stored codes
+    assert ds.rows(0, 8)["image"].dtype == np.uint8
+    # every shard file is self-describing: header uint8 + typed metadata
+    shard = os.path.join(quant_root, ds.shards[0].files["image"])
+    assert ra.header_of(shard).dtype() == np.uint8
+    sinfo = ra.read_quant_metadata(shard)
+    assert sinfo is not None and sinfo.to_dict() == ds.quant["image"].to_dict()
+
+
+def test_host_loader_dequantizes_by_default(quant_root):
+    ds = RaDataset(quant_root)
+    dl = DataLoader(ds, 16, seed=4, shuffle=False)
+    b = next(dl)
+    dl.stop()
+    assert b["image"].dtype == np.float32
+    manual = ds.quant["image"].dequantize(ds.rows(0, 16)["image"])
+    assert np.array_equal(b["image"], manual)
+    raw = DataLoader(ds, 16, seed=4, shuffle=False, dequant=False)
+    assert next(raw)["image"].dtype == np.uint8
+    raw.stop()
+
+
+# --------------------------------------------- DeviceLoader batch equivalence
+def _equiv(root, *, batches=4, batch=16, seed=7, **host_kw):
+    host = DataLoader(RaDataset(root), batch, seed=seed)
+    dev = DeviceLoader(
+        DataLoader(RaDataset(root), batch, seed=seed, reuse_buffers=True,
+                   **host_kw)
+    )
+    try:
+        for _ in range(batches):
+            hb, db = next(host), next(dev)
+            assert hb["_state"].__dict__ == db["_state"].__dict__
+            for f in hb:
+                if f == "_state":
+                    continue
+                da = np.asarray(db[f])
+                assert da.dtype == hb[f].dtype
+                assert np.array_equal(da, hb[f]), f
+    finally:
+        host.stop()
+        dev.stop()
+
+
+def test_device_loader_matches_host_tokens(token_root):
+    _equiv(token_root)
+
+
+def test_device_loader_matches_host_quantized(quant_root):
+    """uint8 over the 'link' + interpret-mode Pallas dequant on CPU is
+    bit-identical to the host numpy dequant (same float32 affine)."""
+    _equiv(quant_root)
+
+
+def test_device_loader_moves_quantized_bytes(quant_root):
+    dev = DeviceLoader(DataLoader(RaDataset(quant_root), 16, seed=0))
+    next(dev)
+    s = dev.stats()
+    dev.stop()
+    per_batch = s["h2d_bytes"] / s["h2d_batches"]
+    # image moves as u8 codes (108 B/row) + int32 label: 4x less than f32
+    assert per_batch == 16 * (6 * 6 * 3 + 4)
+    assert {"h2d_s", "device_wait_s", "device_batches"} <= set(s)
+
+
+def test_device_loader_restore_exact(token_root):
+    ref = DataLoader(RaDataset(token_root), 16, seed=9)
+    batches = [next(ref) for _ in range(5)]
+    ref.stop()
+    dev = DeviceLoader(DataLoader(RaDataset(token_root), 16, seed=9))
+    [next(dev) for _ in range(2)]
+    dev.restore(batches[2]["_state"])
+    nxt = next(dev)
+    dev.stop()
+    assert nxt["_state"].__dict__ == batches[3]["_state"].__dict__
+    assert np.array_equal(np.asarray(nxt["tokens"]), batches[3]["tokens"])
+
+
+def test_device_loader_refuses_started_loader(token_root):
+    dl = DataLoader(RaDataset(token_root), 16, seed=0)
+    next(dl)
+    with pytest.raises(ra.RawArrayError, match="not started"):
+        DeviceLoader(dl)
+    dl.stop()
+    DeviceLoader(dl).stop()  # after stop() wrapping is fine
+
+
+def test_device_bufs_knob(token_root, monkeypatch):
+    monkeypatch.setenv("RA_DEVICE_BUFS", "5")
+    dev = DeviceLoader(DataLoader(RaDataset(token_root), 16, seed=0))
+    assert dev.bufs == 5
+    dev.stop()
+    dev2 = DeviceLoader(DataLoader(RaDataset(token_root), 16, seed=0), bufs=1)
+    assert dev2.bufs == 1
+    dev2.stop()
+
+
+# ----------------------------------------------- review-hardening regressions
+def test_quantize_1d_uses_scalar_params(tmp_path):
+    """A 1-D array is ONE channel: calibration must be a global scalar, not
+    one (scale, bias) pair per element (metadata bigger than the payload)."""
+    x = np.random.default_rng(3).normal(size=4096).astype(np.float32)
+    p = str(tmp_path / "one_d.ra")
+    ra.write(p, x, quantize="u8")
+    info = ra.read_quant_metadata(p)
+    assert info.scale.ndim == 0 and info.bias.ndim == 0
+    assert len(ra.read_metadata(p)) < 256
+    y = ra.read(p, dequantize=True)
+    assert (np.abs(y - x) <= float(info.scale) / 2 + 1e-6).all()
+
+
+def test_channel_params_mismatch_raises_rawarray_error():
+    info = ra.QuantInfo(scale=np.ones(3, np.float32), bias=np.zeros(3, np.float32))
+    with pytest.raises(ra.RawArrayError, match="3 entries.*5 channels"):
+        info.channel_params(5)
+    bad_bias = ra.QuantInfo(scale=np.float32(1.0), bias=np.zeros(2, np.float32))
+    with pytest.raises(ra.RawArrayError, match="bias has 2 entries"):
+        bad_bias.channel_params(5)
+    s, b = info.channel_params(3)
+    assert s.shape == b.shape == (3,)
+
+
+def test_quantize_accepts_dict_metadata(tmp_path):
+    import json
+
+    p = str(tmp_path / "dm.ra")
+    ra.write(p, np.ones((4, 2), np.float32), quantize="u8",
+             metadata={"units": "mm"})
+    meta = json.loads(ra.read_metadata(p))
+    assert meta["units"] == "mm" and "ra_quant" in meta
+
+
+def test_device_loader_stop_detaches_wedged_feeder(token_root):
+    """A feeder wedged past the join timeout (blocked inside the wrapped
+    loader) must not share the wrapped loader with a restarted pipeline:
+    stop() swaps in an equivalent fresh DataLoader."""
+    inner = DataLoader(RaDataset(token_root), 16, seed=6)
+    gate = threading.Event()
+    orig = DataLoader._produce.__get__(inner)
+
+    def wedged(epoch, step, out=None):
+        gate.wait()
+        return orig(epoch, step, out)
+
+    inner._produce = wedged
+    dev = DeviceLoader(inner)
+    dev._start()  # feeder blocks inside next(inner)
+    time.sleep(0.1)
+    feeder = dev._thread
+    dev.stop()  # join times out (~2s): wrapped loader must be replaced
+    assert dev.loader is not inner
+    assert dev.loader.seed == 6 and dev.loader.batch_size == 16
+    # the restarted pipeline iterates the reference sequence from scratch
+    ref = DataLoader(RaDataset(token_root), 16, seed=6)
+    b, r = next(dev), next(ref)
+    assert np.array_equal(np.asarray(b["tokens"]), r["tokens"])
+    assert b["_state"].__dict__ == r["_state"].__dict__
+    gate.set()  # release the zombie; it must exit without stealing a batch
+    feeder.join(timeout=5.0)
+    assert not feeder.is_alive()
+    b, r = next(dev), next(ref)
+    assert np.array_equal(np.asarray(b["tokens"]), r["tokens"])
+    dev.stop()
+    ref.stop()
+    inner.stop()

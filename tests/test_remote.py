@@ -417,3 +417,95 @@ def test_literal_header_directory_not_shadowed(served):
     ra.write(os.path.join(root, "header", "x.ra"), arr)
     assert np.array_equal(ra.read(f"{base}/header/x.ra"), arr)
     assert ra.header_of(f"{base}/header/x.ra").shape == (32,)
+
+
+# ------------------------------------------------------- auth fail-fast (§11)
+import http.server as _http_server
+
+
+class _DenyingHandler(_http_server.BaseHTTPRequestHandler):
+    """Answers EVERY request with a fixed auth-failure status and counts
+    them — the shape of a token-auth plane rejecting a credential."""
+
+    def _deny(self):
+        self.server.hits += 1  # type: ignore[attr-defined]
+        body = b"denied\n"
+        self.send_response(self.server.deny_status)  # type: ignore[attr-defined]
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    do_GET = do_HEAD = do_PUT = _deny
+
+    def log_message(self, fmt, *args):
+        pass
+
+
+@pytest.fixture(params=[401, 403])
+def denying_server(request):
+    srv = _http_server.ThreadingHTTPServer(("127.0.0.1", 0), _DenyingHandler)
+    srv.deny_status = request.param
+    srv.hits = 0
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    try:
+        yield srv, f"http://127.0.0.1:{srv.server_address[1]}"
+    finally:
+        srv.shutdown()
+        srv.server_close()
+        remote.close_readers()
+
+
+def test_auth_rejection_fails_fast_on_reads(denying_server):
+    """401/403 must raise ``RemoteAuthError`` after exactly ONE request —
+    a rejected credential is permanent, so the retry budget (which exists
+    for transient transport faults) must not be burned on it."""
+    srv, base = denying_server
+    with pytest.raises(remote.RemoteAuthError, match=str(srv.deny_status)):
+        remote.RemoteReader(f"{base}/x.ra", retries=5)
+    assert srv.hits == 1  # HEAD stat: one attempt, not retries+1
+
+    srv.hits = 0
+    with pytest.raises(remote.RemoteAuthError, match="token"):
+        remote.fetch_bytes(f"{base}/manifest.json", retries=5)
+    assert srv.hits == 1
+
+
+def test_auth_rejection_fails_fast_on_ranged_get(denying_server):
+    """A reader whose stat succeeded but whose GETs are rejected (token
+    revoked mid-session) also fails fast on the ranged read itself."""
+    srv, base = denying_server
+    reader = remote.RemoteReader.__new__(remote.RemoteReader)
+    # hand-build just enough state to drive _ranged_into directly
+    from repro.remote.client import _ConnPool
+    from urllib.parse import urlsplit
+
+    parts = urlsplit(f"{base}/x.ra")
+    reader.url = f"{base}/x.ra"
+    reader._path = parts.path
+    reader.retries = 5
+    reader._pool = _ConnPool(parts.scheme, parts.hostname, parts.port, 2, 5.0)
+    reader.etag = None
+    reader.size = 1 << 20
+    with pytest.raises(remote.RemoteAuthError, match=str(srv.deny_status)):
+        reader._ranged_into(0, memoryview(bytearray(64)))
+    assert srv.hits == 1
+    reader._pool.close()
+
+
+def test_auth_rejection_fails_fast_on_uploads(denying_server):
+    """Uploads against a rejecting server: one PUT, clear auth error,
+    no retry burn (upload_bytes would otherwise blind-retry)."""
+    srv, base = denying_server
+    with pytest.raises(remote.RemoteAuthError, match="token"):
+        remote.upload_bytes(f"{base}/up.ra", b"payload", token="bad", retries=5)
+    assert srv.hits == 1
+
+
+def test_auth_error_is_rawarray_error(denying_server):
+    """RemoteAuthError stays catch-compatible with every existing caller
+    that handles RawArrayError."""
+    srv, base = denying_server
+    assert issubclass(remote.RemoteAuthError, ra.RawArrayError)
+    with pytest.raises(ra.RawArrayError):
+        remote.fetch_bytes(f"{base}/x")

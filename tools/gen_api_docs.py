@@ -27,6 +27,7 @@ MODULES = [
     ("repro.core.header", "header encode/decode"),
     ("repro.core.dtypes", "eltype <-> numpy dtype mapping"),
     ("repro.core.io", "read / write / memmap / streaming RaWriter"),
+    ("repro.core.quant", "typed quantized-field metadata schema"),
     ("repro.core.engine", "parallel chunked I/O engine"),
     ("repro.core.codec", "chunked compression codec"),
     ("repro.core.sharded", "sharded stores (read + streaming write)"),
@@ -36,6 +37,7 @@ MODULES = [
     ("repro.remote.cache", "block-aligned LRU cache"),
     ("repro.data.dataset", "dataset directories: RaDataset, DatasetBuilder"),
     ("repro.data.loader", "training DataLoader"),
+    ("repro.data.device_loader", "prefetch-to-device feed + on-device dequant"),
     ("repro.data.synth", "synthetic dataset builders"),
     ("repro.checkpoint.store", "checkpoint save/restore (local + URL)"),
     ("repro.formats.ingest", "foreign-format -> dataset converters"),
