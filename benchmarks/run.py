@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|remote|compress|ingest|device|formats|images|pipeline|checkpoint|roofline")
+                   help="engine|remote|compress|ingest|device|formats|images|pipeline|checkpoint|coldstart|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -48,7 +48,7 @@ def main(argv=None) -> None:
         args.only.split(",")
         if args.only
         else ["engine", "remote", "compress", "ingest", "device", "formats",
-              "images", "pipeline", "checkpoint", "roofline"]
+              "images", "pipeline", "checkpoint", "coldstart", "roofline"]
     )
 
     if "engine" in wanted:
@@ -97,6 +97,15 @@ def main(argv=None) -> None:
         rows = bench_checkpoint(full=args.full)
         _print_rows(rows)
         all_rows += rows
+    if "coldstart" in wanted:
+        # imported here: the restore path pulls in jax/pallas, which the
+        # pure I/O benches should not pay for
+        from benchmarks.bench_coldstart import bench_coldstart, write_bench_coldstart
+
+        rows = bench_coldstart(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_coldstart(rows)}")
     if "roofline" in wanted:
         try:
             from benchmarks.roofline import run as roofline_run

@@ -1,5 +1,12 @@
 """Checkpoints as RawArray tensor stores."""
 
+from .coldstart import (
+    ColdStartStats,
+    default_inflight_bytes,
+    restore_naive,
+    restore_pipelined,
+    shardings_from_specs,
+)
 from .store import (
     CheckpointManager,
     load_checkpoint,
@@ -11,5 +18,10 @@ __all__ = [
     "save_checkpoint",
     "load_checkpoint",
     "restore_resharded",
+    "restore_pipelined",
+    "restore_naive",
+    "ColdStartStats",
+    "default_inflight_bytes",
+    "shardings_from_specs",
     "CheckpointManager",
 ]

@@ -97,6 +97,7 @@ def save_checkpoint(
     chunked: bool = False,
     codec: Optional[str] = None,
     chunk_bytes: Optional[int] = None,
+    quantize: Optional[str] = None,
 ) -> str:
     """Synchronous atomic save. Returns the final checkpoint path.
 
@@ -105,6 +106,13 @@ def save_checkpoint(
     the chunks compress serially — the leaf writes already occupy the pool;
     a single-leaf save chunk-parallelizes instead), and restore folds every
     leaf's chunk decodes into the one restore wave.
+
+    ``quantize="u8"`` (DESIGN.md §12/§13) stores every float leaf as uint8
+    codes with data-driven per-channel calibration; the schema rides BOTH in
+    each leaf's trailing metadata (any RawArray reader can decode the file
+    standalone) and in the manifest (so restore resolves dequant parameters
+    without a per-leaf metadata round trip). Non-float and 0-d leaves are
+    stored verbatim. Composes with ``chunked``/``codec``.
 
     ``directory`` may be an ``http(s)://`` URL of a write-enabled byte-range
     server (DESIGN.md §11): every leaf ships as one authenticated PUT with
@@ -142,17 +150,33 @@ def save_checkpoint(
         arr = _leaf_to_numpy(leaf)
         fname = name + ".ra"
         fpath = _join(tmp, fname)
-        write_tasks.append(
-            lambda p=fpath, a=arr: ra.write(
-                p, a, crc32=crc32,
-                chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
-            )
-        )
-        manifest["leaves"][name] = {
+        entry: Dict[str, Any] = {
             "file": fname,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype) if arr.dtype.names is None else "void",
         }
+        meta: Optional[bytes] = None
+        if (
+            quantize is not None
+            and arr.dtype.names is None
+            and np.issubdtype(arr.dtype, np.floating)
+            and arr.ndim >= 1
+        ):
+            # calibrate on the save thread (cheap vs compression) so the
+            # schema can land in the manifest; the engine tasks then write
+            # plain uint8 payloads
+            info = ra.quant.quant_params(arr, quantize)
+            arr = info.quantize(arr)
+            meta = info.encode()
+            entry["quant"] = info.to_dict()
+            entry["stored_dtype"] = str(arr.dtype)
+        write_tasks.append(
+            lambda p=fpath, a=arr, m=meta: ra.write(
+                p, a, metadata=m, crc32=crc32,
+                chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
+            )
+        )
+        manifest["leaves"][name] = entry
     ra.engine.run_tasks(write_tasks)
     body = json.dumps(manifest, indent=1).encode()
     if remote_save:
@@ -170,23 +194,51 @@ def save_checkpoint(
     return final
 
 
-def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str]) -> Dict[str, np.ndarray]:
+def _entry_quant(entry: Dict[str, Any], fpath: str, hdr) -> Optional["ra.quant.QuantInfo"]:
+    """The leaf's dequantization schema, or None for a verbatim leaf.
+
+    Fast path is the manifest (recorded at save time, zero extra I/O); the
+    fallback reads the file's trailing metadata so checkpoints whose leaves
+    were quantized by other writers (plain ``ra.write(quantize=)``) still
+    restore to logical floats."""
+    q = entry.get("quant")
+    if q is not None:
+        return ra.quant.QuantInfo.from_dict(q)
+    want = entry.get("dtype")
+    if hdr.dtype() == np.uint8 and want not in (None, "uint8", "void"):
+        return ra.read_quant_metadata(fpath)
+    return None
+
+
+def _read_leaves_parallel(
+    path: str,
+    manifest: Dict[str, Any],
+    names: List[str],
+    quants_out: Optional[Dict[str, Any]] = None,
+) -> Dict[str, np.ndarray]:
     """Stream many leaf files into preallocated arrays in ONE engine wave:
     cross-file and intra-file slab parallelism share the pool (DESIGN.md §8).
     Chunked-compressed leaves (DESIGN.md §10) join the wave too — one
-    fetch+decompress task per chunk across all leaves."""
+    fetch+decompress task per chunk across all leaves. Quantized-u8 leaves
+    (DESIGN.md §12) are dequantized host-side in a follow-up parallel wave —
+    unless the caller passes ``quants_out``, which receives each quantized
+    leaf's ``QuantInfo`` and leaves the stored u8 codes untouched (the
+    cold-start paths decode on device instead; DESIGN.md §13)."""
     arrays: Dict[str, np.ndarray] = {}
     jobs = []
     chunk_tasks = []
     fds: List[int] = []
     fallback: List[Tuple[str, str]] = []
-    # resolve every leaf's (header, source, chunk table) concurrently first:
-    # remotely each resolution costs 1-2 HTTP round trips, and a serial loop
-    # over hundreds of leaves would dominate cold-start latency
+    # resolve every leaf's (header, source, chunk table, quant schema)
+    # concurrently first: remotely each resolution costs 1-2 HTTP round
+    # trips, and a serial loop over hundreds of leaves would dominate
+    # cold-start latency
     metas: Dict[str, Tuple[str, Any, Any, Any]] = {}
+    quants: Dict[str, Any] = {}
 
     def _resolve(name: str) -> None:
-        fpath = _join(path, manifest["leaves"][name]["file"])
+        entry = manifest["leaves"][name]
+        fpath = _join(path, entry["file"])
         hdr = ra.header_of(fpath)
         src = None
         table = None
@@ -201,6 +253,9 @@ def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str])
                 fds.append(src)
         if chunked and src is not None:
             table = ra.codec.read_table(src, hdr)
+        q = _entry_quant(entry, fpath, hdr)
+        if q is not None:
+            quants[name] = q
         metas[name] = (fpath, hdr, src, table)
 
     try:
@@ -236,6 +291,13 @@ def _read_leaves_parallel(path: str, manifest: Dict[str, Any], names: List[str])
             os.close(fd)
     for name, fpath in fallback:
         arrays[name] = np.asarray(ra.read(fpath))
+    if quants_out is not None:
+        quants_out.update(quants)
+    elif quants:  # host dequant, parallel across leaves (numpy drops the GIL)
+        def _dq(name: str) -> None:
+            arrays[name] = quants[name].dequantize(arrays[name])
+
+        ra.engine.run_tasks([(lambda n=n: _dq(n)) for n in quants])
     return arrays
 
 
@@ -261,7 +323,9 @@ def load_checkpoint(
             arrays = _read_leaves_parallel(path, manifest, names)
         else:
             arrays = {
-                n: np.asarray(ra.read(_join(path, manifest["leaves"][n]["file"])))
+                n: np.asarray(
+                    ra.read(_join(path, manifest["leaves"][n]["file"]), dequantize=True)
+                )
                 for n in names
             }
         out = []
@@ -284,19 +348,29 @@ def restore_resharded(
     *,
     row_start: int,
     row_stop: int,
+    dequantize: bool = False,
 ) -> np.ndarray:
     """Elastic restore: read only rows [start, stop) of one leaf — offset
     arithmetic on the .ra file, no full-array read (a different mesh's host
     reads exactly its slice). Works on a checkpoint URL too (the row slab
     becomes ranged requests) and on chunked-compressed leaves (DESIGN.md
-    §10): only the chunks overlapping the row slab are fetched + decoded."""
+    §10): only the chunks overlapping the row slab are fetched + decoded.
+
+    ``dequantize=True`` reconstructs logical floats from a quantized-u8
+    leaf; row slicing composes with the quant schema because calibration is
+    per-channel over the LAST axis (every row carries all channels)."""
     manifest = _load_manifest(path)
     entry = manifest["leaves"][name]
     fpath = _join(path, entry["file"])
     hdr = ra.header_of(fpath)
+    quant = _entry_quant(entry, fpath, hdr) if dequantize else None
+
+    def _dq(a: np.ndarray) -> np.ndarray:
+        return quant.dequantize(a) if quant is not None else a
+
     chunked = bool(hdr.flags & ra.FLAG_CHUNKED)
     if not ra.is_url(fpath) and not chunked:
-        return np.asarray(ra.memmap_slice(fpath, row_start, row_stop))
+        return _dq(np.asarray(ra.memmap_slice(fpath, row_start, row_stop)))
     if hdr.compressed and not chunked:
         raise ra.RawArrayError(
             "cannot row-slice a whole-file-compressed payload; "
@@ -332,7 +406,7 @@ def restore_resharded(
         finally:
             if fd is not None:
                 os.close(fd)
-    return out
+    return _dq(out)
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -360,6 +434,7 @@ class CheckpointManager:
         chunked: bool = False,
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
+        quantize: Optional[str] = None,
     ):
         self.directory = directory
         self.keep = keep
@@ -367,6 +442,7 @@ class CheckpointManager:
         self.chunked = chunked
         self.codec = codec
         self.chunk_bytes = chunk_bytes
+        self.quantize = quantize
         self._thread: Optional[threading.Thread] = None
         self.save_s = 0.0
         if not ra.is_url(directory):
@@ -390,6 +466,7 @@ class CheckpointManager:
             save_checkpoint(
                 self.directory, step, host_params, host_opt, extra=extra,
                 chunked=self.chunked, codec=self.codec, chunk_bytes=self.chunk_bytes,
+                quantize=self.quantize,
             )
             self._gc()
             self.save_s += time.perf_counter() - t0

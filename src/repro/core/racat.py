@@ -241,6 +241,112 @@ def inspect_file(path: str) -> str:
     return "\n".join(lines)
 
 
+def _checkpoint_dir(path: str) -> Optional[str]:
+    """The checkpoint directory when ``path`` names one (a directory — or
+    directory URL — holding ``manifest.json``, or that manifest itself);
+    ``None`` for anything else, including every ``*.ra`` file."""
+    stripped = path.rstrip("/")
+    if stripped.endswith("manifest.json"):
+        return stripped[: -len("manifest.json")].rstrip("/") or "."
+    if stripped.endswith(".ra") or stripped.endswith(".npy"):
+        return None
+    if not is_url(path):
+        if os.path.isdir(path) and os.path.exists(os.path.join(path, "manifest.json")):
+            return stripped
+        return None
+    # a directory URL has no marker; one cheap manifest probe decides
+    import json
+
+    from .. import remote
+
+    try:
+        obj = json.loads(remote.fetch_bytes(raio.join_path(stripped, "manifest.json")))
+    except (RawArrayError, ValueError, OSError):
+        return None
+    return stripped if isinstance(obj, dict) and "leaves" in obj else None
+
+
+def _flag_names(hdr: Header) -> str:
+    names = [
+        name
+        for bit, name in [
+            (1, "big-endian"), (FLAG_CRC32_TRAILER, "crc32"),
+            (FLAG_ZLIB, "zlib"), (FLAG_CHUNKED, "chunked"),
+        ]
+        if hdr.flags & bit
+    ]
+    return ",".join(names) if names else "-"
+
+
+def inspect_checkpoint(ckpt: str) -> str:
+    """Audit a checkpoint's cold-start footprint without loading a single
+    payload byte: per-leaf logical dtype/shape/flags/codec/quant schema plus
+    total stored vs logical bytes. Headers (and chunk-table heads) resolve
+    in one parallel engine wave — the same wave 1 the restore engine runs
+    (DESIGN.md §13), so this is also a dry run of restore resolution."""
+    from ..checkpoint.store import _entry_quant, _load_manifest
+
+    from . import engine
+
+    manifest = _load_manifest(ckpt)
+    leaves = manifest.get("leaves", {})
+    names = sorted(leaves)
+    rows: dict = {}
+
+    def _resolve(name: str) -> None:
+        entry = leaves[name]
+        fpath = raio.join_path(ckpt, entry["file"])
+        hdr = header_of(fpath)
+        codec_name = "-"
+        if hdr.flags & FLAG_CHUNKED:
+            if is_url(fpath):
+                from .. import remote
+
+                table = chunked_codec.read_table(remote.get_reader(fpath), hdr)
+            else:
+                fd = os.open(fpath, os.O_RDONLY)
+                try:
+                    table = chunked_codec.read_table(fd, hdr)
+                finally:
+                    os.close(fd)
+            codec_name = chunked_codec.get_codec(table.codec_id).name
+        elif hdr.flags & FLAG_ZLIB:
+            codec_name = "zlib-whole"
+        rows[name] = (hdr, codec_name, _entry_quant(entry, fpath, hdr))
+
+    engine.run_tasks([(lambda n=n: _resolve(n)) for n in names])
+
+    stored = logical = 0
+    body: List[str] = []
+    for name in names:
+        hdr, codec_name, quant = rows[name]
+        if quant is not None:
+            dtype = quant.orig_dtype
+            leaf_logical = hdr.logical_nbytes * np.dtype(quant.orig_dtype).itemsize
+            per = "per-channel" if quant.scale.ndim else "scalar"
+            qdesc = f"{quant.mode}->{quant.orig_dtype} {per}"
+        else:
+            dtype = str(hdr.dtype())
+            leaf_logical = hdr.logical_nbytes
+            qdesc = "-"
+        stored += hdr.data_length
+        logical += leaf_logical
+        body.append(
+            f"  {name:<40} {dtype:<9} {str(list(hdr.shape)):<16} "
+            f"{_flag_names(hdr):<14} {codec_name:<10} {qdesc}"
+        )
+    ratio = stored / logical if logical else 1.0
+    head = [
+        f"checkpoint   {ckpt}",
+        f"step         {manifest.get('step', '?')}",
+        f"leaves       {len(names)}",
+        f"stored       {stored} bytes",
+        f"logical      {logical} bytes ({ratio:.3f} stored/logical)",
+        f"  {'leaf':<40} {'dtype':<9} {'shape':<16} {'flags':<14} {'codec':<10} quant",
+    ]
+    return "\n".join(head + body)
+
+
 def compress_file(
     src: str,
     dst: str,
@@ -339,7 +445,10 @@ subcommands:
   od         print the od(1) commands that introspect this file (paper §3.2)
   verify     recompute every integrity signal (header consistency, CRC32
              trailer, zlib size, chunk-table geometry + per-chunk CRCs)
-  inspect    header + metadata length + chunk-table summary
+  inspect    header + metadata length + chunk-table summary; pointed at a
+             checkpoint directory (or its manifest.json), prints the
+             per-leaf dtype/shape/flags/codec/quant audit instead —
+             stored vs logical bytes without loading any payload
   compress   rewrite as chunk-compressed:  racat compress <src> <dst>
   ingest     stream-concatenate .npy/.ra sources into one file or URL:
              racat ingest <dst> <src...> [--codec C] [--crc32]
@@ -420,7 +529,8 @@ def main(argv=None) -> int:
             return 0
 
         if args.cmd == "inspect":
-            print(inspect_file(args.path))
+            ckpt = _checkpoint_dir(args.path)
+            print(inspect_checkpoint(ckpt) if ckpt else inspect_file(args.path))
             return 0
 
         hdr = header_of(args.path)

@@ -192,14 +192,9 @@ class DeviceLoader:
 
         for f, (scale, bias, out_dtype) in quant.items():
             if f in moved:
-                x = moved[f]
-                rows = int(np.prod(x.shape[:-1], dtype=np.int64)) or 1
-                # bound the grid to ~8 row blocks: fewer, larger tiles
-                # amortize per-block overhead (interpret mode especially)
-                br = self._block_rows or max(256, -(-rows // 8))
-                moved[f] = ops.dequant_u8(
-                    x, scale, bias, out_dtype=out_dtype,
-                    block_rows=br, interpret=self._interpret,
+                moved[f] = ops.dequant_rows(
+                    moved[f], scale, bias, out_dtype=out_dtype,
+                    block_rows=self._block_rows, interpret=self._interpret,
                 )
 
     def __next__(self) -> Dict[str, Any]:

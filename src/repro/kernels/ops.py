@@ -72,3 +72,16 @@ def dequant_u8(x, scale, bias, *, out_dtype=jnp.float32, block_rows: int = 256, 
         block_rows=min(block_rows, x2.shape[0]), interpret=_auto_interpret(interpret)
     )
     return out.reshape(shape)
+
+
+def dequant_rows(x, scale, bias, *, out_dtype=jnp.float32, block_rows: Optional[int] = None, interpret: Optional[bool] = None):
+    """``dequant_u8`` with an auto-sized grid: when ``block_rows`` is None
+    the row blocks are sized so the grid has ~8 tiles — fewer, larger tiles
+    amortize per-block overhead (interpret mode especially). Shared by the
+    device feed plane and the cold-start restore engine so both pick
+    identical kernel variants (one jit cache entry per shape family)."""
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= int(d)
+    br = block_rows or max(256, -(-max(rows, 1) // 8))
+    return dequant_u8(x, scale, bias, out_dtype=out_dtype, block_rows=br, interpret=interpret)

@@ -35,6 +35,12 @@ def main(argv=None) -> int:
         "--device-bufs", type=int, default=None,
         help="device-resident batch depth (default: RA_DEVICE_BUFS or 2)",
     )
+    p.add_argument(
+        "--restore", choices=("pipelined", "naive"), default="pipelined",
+        help="--resume restore path (DESIGN.md §13): 'pipelined' overlaps "
+             "fetch/decode/dequant/H2D under the RA_COLDSTART_INFLIGHT "
+             "budget; 'naive' is the phase-by-phase baseline",
+    )
     args = p.parse_args(argv)
 
     from repro.configs import get_config
@@ -66,6 +72,7 @@ def main(argv=None) -> int:
             adamw=AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=max(args.steps, 200)),
         ),
         resume=not args.fresh,
+        restore_mode=args.restore,
     )
     print(f"done: steps={out['steps']} wall={out['wall_s']:.1f}s preempted={out['preempted']}")
     return 0

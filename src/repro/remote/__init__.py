@@ -34,6 +34,7 @@ from .client import (
     remote_read,
     remote_read_into,
     remote_read_metadata,
+    stat_dir,
     upload_bytes,
 )
 from .server import ArrayServer, serve
@@ -56,5 +57,6 @@ __all__ = [
     "reset_shared_cache",
     "serve",
     "shared_cache",
+    "stat_dir",
     "upload_bytes",
 ]

@@ -98,6 +98,7 @@ class _ConnPool:
         self.host = host
         self.port = port
         self.timeout = timeout
+        self.limit = limit
         self._sem = threading.BoundedSemaphore(limit)
         self._lock = threading.Lock()
         self._free: List[http.client.HTTPConnection] = []
@@ -125,6 +126,38 @@ class _ConnPool:
             else:
                 self._free.append(conn)
         self._sem.release()
+
+    def prewarm(self, n: int) -> int:
+        """Eagerly open up to ``n`` keep-alive connections (capped at the
+        pool limit) and park them in the free list, so the first parallel
+        read wave starts with established sockets instead of serializing
+        TCP/TLS handshakes inside it (DESIGN.md §13). Connect errors are
+        swallowed — the regular acquire path reports them with its usual
+        retry/raise contract. Returns the number of sockets opened."""
+        with self._lock:
+            if self._closed:
+                return 0
+            want = max(0, min(n, self.limit) - len(self._free))
+        made: List[http.client.HTTPConnection] = []
+        for _ in range(want):
+            c = self._new_conn()
+            try:
+                c.connect()
+            except OSError:
+                break
+            made.append(c)
+        with self._lock:
+            if self._closed:
+                pass  # close below, outside the lock
+            else:
+                self._free.extend(made)
+                return len(made)
+        for c in made:
+            try:
+                c.close()
+            except Exception:
+                pass
+        return 0
 
     def discard(self, conn: http.client.HTTPConnection) -> None:
         try:
@@ -163,6 +196,7 @@ class RemoteReader:
         retries: int = 2,
         cache: Optional[BlockCache] = None,
         use_cache: bool = True,
+        pinned: Optional[Tuple[int, Optional[str]]] = None,
     ):
         if not is_url(url):
             raise RawArrayError(f"not an http(s) URL: {url!r}")
@@ -177,7 +211,11 @@ class RemoteReader:
             conns or default_conns(), default_timeout() if timeout is None else timeout,
         )
         self.cache = (cache if cache is not None else shared_cache()) if use_cache else None
-        self.size, self.etag = self._stat()
+        # a caller that already holds the object's (size, etag) — e.g. from
+        # one stat_dir() listing covering a whole checkpoint — skips the
+        # per-object HEAD; the first ranged response still verifies its
+        # ETag against the pin, so a stale listing fails loudly, not late
+        self.size, self.etag = self._stat() if pinned is None else (int(pinned[0]), pinned[1])
         # cache tag pins URL + version: a changed ETag can never hit stale blocks
         self._tag = f"{url}@{self.etag or ''}"
         self._closed = False
@@ -186,6 +224,12 @@ class RemoteReader:
     def close(self) -> None:
         self._closed = True
         self._pool.close()
+
+    def prewarm(self, n: Optional[int] = None) -> int:
+        """Pre-open up to ``n`` pooled sockets (default: the full pool width,
+        knob ``RA_REMOTE_CONNS``) so a following engine wave pays zero
+        handshakes. Returns sockets actually opened (0 when already warm)."""
+        return self._pool.prewarm(self._pool.limit if n is None else n)
 
     def __enter__(self) -> "RemoteReader":
         return self
@@ -419,13 +463,46 @@ def max_readers() -> int:
     return max(1, _env_int("RA_REMOTE_READERS", 64))
 
 
-def get_reader(url: str) -> RemoteReader:
+def get_reader(
+    url: str,
+    *,
+    revalidate: bool = False,
+    pinned: Optional[Tuple[int, Optional[str]]] = None,
+) -> RemoteReader:
+    """Pooled reader for ``url``. With ``revalidate=True`` a cached reader is
+    re-HEADed first and silently replaced if the object's (size, ETag) moved —
+    callers that pin a version set at a point in time (cold-start restore)
+    use this so the pin reflects the server's *current* object, not whatever
+    generation an earlier traversal happened to cache. ``pinned=(size,
+    etag)`` — e.g. one entry of a :func:`stat_dir` listing — plays the same
+    role with zero extra round trips: a cached reader is reused only if it
+    already matches, and a fresh reader adopts the pin instead of HEADing."""
+    stale: Optional[RemoteReader] = None
     with _readers_lock:
         r = _readers.get(url)
         if r is not None and not r._closed:
             _readers.move_to_end(url)
-            return r
-    r = RemoteReader(url)
+            if pinned is not None:
+                if (r.size, r.etag) == (int(pinned[0]), pinned[1]):
+                    return r
+            elif not revalidate:
+                return r
+    if r is not None and not r._closed:
+        if pinned is None:
+            try:
+                if r._stat() == (r.size, r.etag):
+                    return r
+            except Exception:
+                pass  # unreachable/changed -> rebuild below, surfacing real errors
+        stale = r
+        with _readers_lock:
+            if _readers.get(url) is stale:
+                del _readers[url]
+        try:
+            stale.close()
+        except Exception:
+            pass
+    r = RemoteReader(url, pinned=pinned)
     evicted: List[RemoteReader] = []
     with _readers_lock:
         cur = _readers.get(url)
@@ -485,6 +562,24 @@ def fetch_bytes(url: str, *, timeout: Optional[float] = None, retries: int = 2) 
         finally:
             conn.close()
     raise RawArrayError(f"GET {url} failed after {max(0, retries) + 1} attempts: {err!r}")
+
+
+def stat_dir(dir_url: str, *, timeout: Optional[float] = None) -> Dict[str, Tuple[int, Optional[str]]]:
+    """One-round-trip version-set listing: GET ``/stat/<dir>`` and return
+    ``{name: (size, etag)}`` for every regular file in the directory. A
+    cold-start restore feeds each entry to :func:`get_reader` as ``pinned``,
+    replacing one HEAD per leaf with a single listing (the HTTP analogue of
+    S3 ListObjectsV2, which also returns ETags). Raises ``RawArrayError`` if
+    the server has no ``/stat/`` route (older servers → caller falls back to
+    per-leaf HEAD pinning) or the listing is malformed."""
+    parts = urlsplit(dir_url)
+    stat_url = f"{parts.scheme}://{parts.netloc}/stat{parts.path or '/'}"
+    body = fetch_bytes(stat_url, timeout=timeout)
+    try:
+        files = json.loads(body)["files"]
+        return {str(k): (int(v["size"]), v.get("etag")) for k, v in files.items()}
+    except (ValueError, KeyError, TypeError) as e:
+        raise RawArrayError(f"malformed /stat listing from {stat_url}: {e!r}") from e
 
 
 # ------------------------------------------------------------- upload plane

@@ -61,6 +61,11 @@ def file_etag(st: os.stat_result) -> str:
 class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"  # keep-alive: one conn serves many ranges
     server_version = "RawArrayHTTP/1.0"
+    # TCP_NODELAY: responses are written headers-then-body (two sends), and
+    # with Nagle on, the body of a mid-size ranged GET sits behind the
+    # client's delayed ACK — a flat ~40ms per request that dwarfs the
+    # transfer itself on fast links
+    disable_nagle_algorithm = True
 
     def log_message(self, fmt, *args):  # quiet by default; --verbose re-enables
         if getattr(self.server, "verbose", False):
@@ -208,6 +213,38 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
             except OSError:
                 return
             left -= len(chunk)
+
+    def _send_stat_json(self, relpath: str) -> None:
+        """``GET /stat/<dir>``: one-round-trip version pin for every regular
+        file directly under a served directory — ``{"files": {name: {size,
+        etag}}}`` with the SAME etag values the entity responses carry, so
+        a client can pin a whole checkpoint's version set with one request
+        instead of a HEAD per leaf (the ranged reads that follow still
+        verify each response's ETag against the pin)."""
+        root = self.server.root  # type: ignore[attr-defined]
+        full = os.path.realpath(os.path.join(root, relpath.lstrip("/")))
+        if (full != root and not full.startswith(root + os.sep)) or not os.path.isdir(full):
+            self._fail(404, "not found")
+            return
+        files = {}
+        try:
+            with os.scandir(full) as it:
+                for de in it:
+                    if de.is_file(follow_symlinks=True):
+                        st = de.stat(follow_symlinks=True)
+                        files[de.name] = {"size": st.st_size, "etag": file_etag(st)}
+        except OSError as e:
+            self._fail(500, f"stat failed: {e}")
+            return
+        body = json.dumps({"files": files}).encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except OSError:
+            pass
 
     def _send_header_json(self, relpath: str) -> None:
         path = self._resolve(relpath)
@@ -402,6 +439,9 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         if full is None and path.startswith("/header/") and not head_only:
             self._send_header_json(path[len("/header"):])
             return
+        if full is None and path.startswith("/stat/") and not head_only:
+            self._send_stat_json(path[len("/stat"):])
+            return
         if full is None:
             self._fail(404, "not found")
             return
@@ -422,6 +462,11 @@ class ArrayServer(http.server.ThreadingHTTPServer):
     requests carrying ``Authorization: Bearer <token>``."""
 
     daemon_threads = True
+    # socketserver's default listen backlog (5) makes connection bursts —
+    # a pool prewarm, a parallel read wave from a many-leaf checkpoint —
+    # hit kernel SYN drops and 1s retransmit stalls; size it like a real
+    # file server instead
+    request_queue_size = 128
 
     def __init__(
         self,

@@ -16,19 +16,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint import load_checkpoint
+from ..checkpoint import restore_naive, restore_pipelined
 from ..models.config import ModelConfig
 
 
 class ServeEngine:
-    def __init__(self, model, params: Any = None, *, checkpoint: Optional[str] = None):
+    def __init__(
+        self,
+        model,
+        params: Any = None,
+        *,
+        checkpoint: Optional[str] = None,
+        restore: str = "pipelined",
+    ):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         if params is None:
             if checkpoint is None:
                 raise ValueError("need params or checkpoint")
             like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-            params, _, _ = load_checkpoint(checkpoint, like, mmap=True)
+            # cold start is checkpoint-read latency: the overlapped restore
+            # engine (DESIGN.md §13) is the default; "naive" keeps the
+            # phase-by-phase baseline reachable for comparison
+            if restore == "pipelined":
+                params, _, _ = restore_pipelined(checkpoint, like)
+            elif restore == "naive":
+                params, _, _ = restore_naive(checkpoint, like)
+            else:
+                raise ValueError(f"restore must be 'pipelined' or 'naive', got {restore!r}")
         self.params = params
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))

@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from ..checkpoint import CheckpointManager, load_checkpoint
+from ..checkpoint import CheckpointManager, restore_naive, restore_pipelined
 from ..data import DataLoader, LoaderState
 from ..distributed import optimizer as optim
 from ..models.config import ModelConfig
@@ -45,6 +45,7 @@ def train(
     *,
     step_fn: Optional[Callable] = None,
     resume: bool = True,
+    restore_mode: str = "pipelined",
     init_rng: int = 0,
     hooks: Optional[List[Callable[[int, Dict[str, float]], None]]] = None,
 ) -> Dict[str, Any]:
@@ -70,7 +71,10 @@ def train(
     start_step = 0
     if resume and cm.latest() is not None:
         s = cm.latest()
-        params, opt_state, extra = load_checkpoint(cm.path(s), params, opt_state)
+        # overlapped cold-start restore straight to device (DESIGN.md §13);
+        # restore_mode="naive" keeps the phase-by-phase baseline reachable
+        restore_fn = restore_pipelined if restore_mode == "pipelined" else restore_naive
+        params, opt_state, extra = restore_fn(cm.path(s), params, opt_state)
         if "loader" in extra:
             loader.restore(LoaderState.from_dict(extra["loader"]))
         start_step = s
