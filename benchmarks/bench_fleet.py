@@ -1,0 +1,209 @@
+"""Serving-fleet benchmark (DESIGN.md §14) — loopback, real sockets.
+
+Three phases against in-process fleets (origin + edge replicas + router):
+
+  identity   router-fronted reads must be byte-identical to local reads
+             (plain and chunked layouts) — doubles as the CI fleet smoke
+  herd       100 concurrent clients hammer ONE cold block through a slow
+             origin; single-flight coalescing must produce EXACTLY ONE
+             origin fetch (the counters are asserted, not eyeballed)
+  scaling    a gather workload whose working set thrashes one edge's RAM
+             cache but fits the 3-replica aggregate, against an origin
+             serialized behind a per-request delay (a thin modeled
+             uplink). Consistent hashing partitions the key space, so
+             3 replicas must beat 1 replica on aggregate GB/s.
+
+The run *fails loudly* if bytes mismatch, the herd is not coalesced to a
+single fetch, or 3 replicas fail to out-run 1. Writes ``BENCH_FLEET.json``
+at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+import repro.core as ra
+from repro import fleet, remote
+
+MIB = 1 << 20
+BLOCK = 1 << 18  # edge cache block; requests are block-aligned
+SCALES = {
+    # working set deliberately ~3x one edge's RAM cache and spill disabled:
+    # capacity scaling is the thing under test
+    "quick": dict(files=6, file_mib=4, cache_mib=8, requests=192, clients=32,
+                  delay_s=0.010, herd_clients=100),
+    "paper": dict(files=9, file_mib=8, cache_mib=24, requests=512, clients=64,
+                  delay_s=0.010, herd_clients=200),
+}
+
+
+def _reset():
+    remote.close_readers()
+    remote.reset_shared_cache()
+    remote.reset_breakers()
+
+
+def _write_set(d: str, nfiles: int, file_mib: int) -> List[str]:
+    rng = np.random.default_rng(7)
+    names = []
+    for i in range(nfiles):
+        n = file_mib * MIB // 4
+        arr = rng.integers(0, 1 << 30, size=n, dtype=np.uint32).view(np.float32)
+        name = f"shard{i}.ra"
+        ra.write(os.path.join(d, name), arr)
+        names.append(name)
+    return names
+
+
+def _phase_identity(rows: List[Dict]) -> None:
+    d = tempfile.mkdtemp(prefix="ra_bench_fleet_id_")
+    fl = None
+    try:
+        rng = np.random.default_rng(3)
+        plain = rng.standard_normal((512, 777)).astype(np.float32)
+        ra.write(os.path.join(d, "plain.ra"), plain)
+        chunked = rng.integers(-100, 100, size=200_000, dtype=np.int32)
+        ra.write(os.path.join(d, "chunked.ra"), chunked, chunked=True)
+
+        fl = fleet.serve(d, replicas=3, revalidate_s=0.0)
+        for name, arr in (("plain.ra", plain), ("chunked.ra", chunked)):
+            got = ra.read(f"{fl.url}/{name}")
+            if not (got.dtype == arr.dtype and np.array_equal(got, arr)):
+                raise RuntimeError(f"router-fronted read of {name} is NOT "
+                                   "byte-identical to the local read")
+        hdr = remote.remote_header_of(f"{fl.url}/plain.ra")
+        if tuple(hdr.shape) != plain.shape:
+            raise RuntimeError("/header/ through the router disagrees with local")
+        rows.append({"bench": "fleet", "mode": "identity", "identical": True,
+                     "replicas": 3, "layouts": "plain,chunked"})
+    finally:
+        if fl is not None:
+            fl.shutdown()
+        _reset()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _phase_herd(rows: List[Dict], cfg: Dict) -> None:
+    d = tempfile.mkdtemp(prefix="ra_bench_fleet_herd_")
+    fl = None
+    try:
+        _write_set(d, 1, cfg["file_mib"])
+        fl = fleet.serve(d, replicas=3, delay_s=0.05, revalidate_s=30.0,
+                         block_bytes=BLOCK)
+        herd = cfg["herd_clients"]
+        trace = [("/shard0.ra", 0, BLOCK)] * herd
+        rep = fleet.run_load(fl.url, trace, clients=herd)
+        fetches = sum(e._fetches_by_path.get("/shard0.ra", 0) for e in fl.edges)
+        waits = sum(e.flights.coalesced_waits for e in fl.edges)
+        if rep["errors"]:
+            raise RuntimeError(f"herd saw {int(rep['errors'])} errors")
+        if fetches != 1:
+            raise RuntimeError(
+                f"a {herd}-client herd on one hot block cost {fetches} origin "
+                "fetches — single-flight coalescing is broken")
+        rows.append({"bench": "fleet", "mode": "herd", "clients": herd,
+                     "origin_fetches": fetches, "coalesced_waits": waits,
+                     "p50_ms": round(rep["p50_ms"], 2),
+                     "p99_ms": round(rep["p99_ms"], 2)})
+    finally:
+        if fl is not None:
+            fl.shutdown()
+        _reset()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _measure_replicas(d: str, names: List[str], cfg: Dict, replicas: int) -> Dict:
+    fl = fleet.serve(d, replicas=replicas, delay_s=cfg["delay_s"],
+                     revalidate_s=30.0, block_bytes=BLOCK,
+                     cache_bytes=cfg["cache_mib"] * MIB, spill=False)
+    try:
+        files = [(f"/{n}", os.path.getsize(os.path.join(d, n))) for n in names]
+        trace = fleet.build_trace("gather", files, req_bytes=BLOCK,
+                                  requests=cfg["requests"], seed=11)
+        fleet.run_load(fl.url, trace, clients=cfg["clients"])  # warm pass
+        rep = fleet.run_load(fl.url, trace, clients=cfg["clients"])
+        if rep["errors"]:
+            raise RuntimeError(f"{int(rep['errors'])} errors at {replicas} replicas")
+        rep["origin_fetches"] = sum(e.origin_fetches for e in fl.edges)
+        ram = [e.cache.stats() for e in fl.edges]
+        rep["ram_hit_ratio"] = round(
+            sum(s["hits"] for s in ram)
+            / max(1.0, sum(s["hits"] + s["misses"] for s in ram)), 3)
+        return rep
+    finally:
+        fl.shutdown()
+        _reset()
+
+
+def _phase_scaling(rows: List[Dict], cfg: Dict) -> None:
+    d = tempfile.mkdtemp(prefix="ra_bench_fleet_scale_")
+    try:
+        names = _write_set(d, cfg["files"], cfg["file_mib"])
+        reps: Dict[int, Dict] = {}
+        for n in (1, 3):
+            r = _measure_replicas(d, names, cfg, n)
+            reps[n] = r
+            rows.append({"bench": "fleet", "mode": f"replicas_{n}",
+                         "clients": cfg["clients"],
+                         "gbps": round(r["gbps"], 4),
+                         "p50_ms": round(r["p50_ms"], 2),
+                         "p99_ms": round(r["p99_ms"], 2),
+                         "origin_fetches": int(r["origin_fetches"]),
+                         "ram_hit_ratio": r["ram_hit_ratio"]})
+        speedup = reps[3]["gbps"] / max(reps[1]["gbps"], 1e-12)
+        rows.append({"bench": "fleet", "mode": "summary",
+                     "working_set_mib": cfg["files"] * cfg["file_mib"],
+                     "edge_cache_mib": cfg["cache_mib"],
+                     "origin_delay_ms": cfg["delay_s"] * 1e3,
+                     "speedup_3_vs_1": round(speedup, 2)})
+        if speedup <= 1.0:
+            raise RuntimeError(
+                f"3 replicas ({reps[3]['gbps']:.4f} GB/s) did not beat 1 "
+                f"({reps[1]['gbps']:.4f} GB/s) — aggregate cache scaling broken")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_fleet(full: bool = False) -> List[Dict]:
+    cfg = SCALES["paper" if full else "quick"]
+    rows: List[Dict] = []
+    _phase_identity(rows)
+    _phase_herd(rows, cfg)
+    _phase_scaling(rows, cfg)
+    return rows
+
+
+def write_bench_fleet(rows: List[Dict], path: str = None) -> str:
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                            "BENCH_FLEET.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="paper-scale working set")
+    args = p.parse_args(argv)
+    rows = bench_fleet(full=args.full)
+    for r in rows:
+        keys = [k for k in r if k != "bench"]
+        print(r["bench"] + "," + ",".join(f"{k}={r[k]}" for k in keys))
+    print(f"# wrote {write_bench_fleet(rows)}")
+
+
+if __name__ == "__main__":
+    main()

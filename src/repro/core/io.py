@@ -19,7 +19,10 @@ copies.
 Every read-side entry point also accepts ``http(s)://`` URLs and dispatches
 to the remote data plane (``repro.remote``, DESIGN.md §9): the same header
 decode and engine-planned slab reads, issued as parallel byte-range
-requests.
+requests. The URL may just as well point at a ``repro.fleet`` router
+(DESIGN.md §14) — the consistent-hash edge tier speaks the same
+byte-range dialect and serves the origin's ETag, so slab, span, and
+gather waves run unchanged through the proxy.
 
 The streaming ingest plane (DESIGN.md §11): ``RaWriter`` writes a file
 incrementally — unknown leading dimension, row batches, chunk-parallel

@@ -29,6 +29,14 @@ def env_int(name: str, default: int) -> int:
     except ValueError:
         return default
 
+
+def env_float(name: str, default: float) -> float:
+    """Float env knob, read at call time; malformed/unset falls back."""
+    try:
+        return float(os.environ.get(name, ""))
+    except ValueError:
+        return default
+
 # ASCII of "rawarray" read as a little-endian u64. The byte sequence on disk
 # is literally the string b"rawarray".
 MAGIC: int = int.from_bytes(b"rawarray", "little")

@@ -390,7 +390,8 @@ class RaDataset:
             engine.run_tasks([(lambda s=si, g=f: self._fmeta(s, g)) for si, f in pending])
 
     def io_stats(self) -> Dict[str, int]:
-        """I/O observability counters: block-cache hit/miss/eviction over
+        """I/O observability counters: block-cache hit/miss/eviction (plus a
+        combined ``hit_ratio`` recomputed from the summed counters) over
         this dataset's remote readers (empty for a local dataset), plus the
         codec's chunk decode counters (``chunk_reads`` /
         ``chunk_stored_bytes`` / ``chunk_raw_bytes``) when any chunked
@@ -410,7 +411,12 @@ class RaDataset:
                     caches.append(cache)
             for c in caches:
                 for k, v in c.stats().items():
+                    if k == "hit_ratio":
+                        continue  # a ratio does not sum; recomputed below
                     out[k] = out.get(k, 0) + v
+            total = out.get("hits", 0) + out.get("misses", 0)
+            if total:
+                out["hit_ratio"] = out["hits"] / total
         cstats = chunked_codec.stats()
         if any(cstats.values()):
             out.update(cstats)

@@ -22,9 +22,11 @@ accept URLs.
 
 from .cache import BlockCache, reset_shared_cache, shared_cache
 from .client import (
+    CircuitBreaker,
     RemoteAuthError,
     RemoteReader,
     RemoteWriter,
+    breaker_for,
     close_readers,
     default_token,
     fetch_bytes,
@@ -34,17 +36,21 @@ from .client import (
     remote_read,
     remote_read_into,
     remote_read_metadata,
+    reset_breakers,
     stat_dir,
     upload_bytes,
 )
-from .server import ArrayServer, serve
+from .server import ArrayServer, ServerMetrics, serve
 
 __all__ = [
     "ArrayServer",
     "BlockCache",
+    "CircuitBreaker",
     "RemoteAuthError",
     "RemoteReader",
     "RemoteWriter",
+    "ServerMetrics",
+    "breaker_for",
     "close_readers",
     "default_token",
     "fetch_bytes",
@@ -54,6 +60,7 @@ __all__ = [
     "remote_read",
     "remote_read_into",
     "remote_read_metadata",
+    "reset_breakers",
     "reset_shared_cache",
     "serve",
     "shared_cache",

@@ -40,7 +40,16 @@ def default_capacity_bytes() -> int:
 class BlockCache:
     """Thread-safe LRU over fixed-size byte blocks with hit/miss/eviction
     counters. A zero capacity disables caching (every ``get`` is a miss and
-    ``put`` is a no-op), which keeps call sites branch-free."""
+    ``put`` is a no-op), which keeps call sites branch-free.
+
+    Counter discipline (audited for the fleet tier, DESIGN.md §14): every
+    counter mutation happens inside ``self._lock`` — the same lock that
+    guards the block map — so concurrent readers (the threaded client pool,
+    edge-tier request threads) can never lose increments to a read-modify-
+    write race, and ``stats()`` always reports a consistent snapshot.
+    External code must treat the bare ``hits``/``misses``/``evictions``
+    attributes as read-only observables and go through ``stats()`` for
+    anything that needs cross-counter consistency (e.g. ``hit_ratio``)."""
 
     def __init__(
         self,
@@ -57,6 +66,7 @@ class BlockCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
     def __len__(self) -> int:
         return len(self._blocks)
@@ -94,11 +104,15 @@ class BlockCache:
                 self.evictions += 1
 
     def invalidate(self, tag: str) -> int:
-        """Drop every block of one object version; returns blocks dropped."""
+        """Drop every block of one object version (the edge tier calls this
+        when a path's origin ETag changes, DESIGN.md §14); returns blocks
+        dropped."""
         with self._lock:
             keys = [k for k in self._blocks if k[0] == tag]
             for k in keys:
                 self._nbytes -= len(self._blocks.pop(k))
+            if keys:
+                self.invalidations += 1
             return len(keys)
 
     def clear(self) -> None:
@@ -106,14 +120,26 @@ class BlockCache:
             self._blocks.clear()
             self._nbytes = 0
 
-    def stats(self) -> Dict[str, int]:
+    def reset_stats(self) -> None:
+        """Zero the counters without touching cached blocks (benchmarks:
+        isolate one phase's traffic)."""
         with self._lock:
+            self.hits = self.misses = self.evictions = self.invalidations = 0
+
+    def stats(self) -> Dict[str, float]:
+        """Consistent counter snapshot. ``hit_ratio`` is hits/(hits+misses)
+        computed under the lock (0.0 before any traffic), so it can never
+        mix a ``hits`` from one instant with a ``misses`` from another."""
+        with self._lock:
+            total = self.hits + self.misses
             return {
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "invalidations": self.invalidations,
                 "blocks": len(self._blocks),
                 "nbytes": self._nbytes,
+                "hit_ratio": (self.hits / total) if total else 0.0,
             }
 
 

@@ -27,7 +27,11 @@ server cannot satisfy raises ``RawArrayError`` after bounded retries on
 fresh connections — never a hang (sockets carry a timeout, knob
 ``RA_REMOTE_TIMEOUT``). Upload *appends* are the exception: they are never
 blind-retried (a half-applied append would desynchronize the session and
-the server answers 409 with its actual part size instead).
+the server answers 409 with its actual part size instead). Consecutive
+connection *refusals* trip a per-host :class:`CircuitBreaker` (DESIGN.md
+§14): once open, every call to that host fails in microseconds instead of
+re-burning its retry budget — what lets the fleet router fail over to the
+next ring node as soon as a replica dies.
 """
 
 from __future__ import annotations
@@ -36,6 +40,7 @@ import http.client
 import json
 import os
 import threading
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple, Union
 from urllib.parse import urlsplit
@@ -52,6 +57,7 @@ from ..core.spec import (
     FLAG_CRC32_TRAILER,
     FLAG_ZLIB,
     RawArrayError,
+    env_float as _env_float,
     env_int as _env_int,
 )
 from .cache import BlockCache, shared_cache
@@ -73,6 +79,97 @@ def _raise_for_auth(status: int, url: str, what: str) -> None:
             f"(check the bearer token — RA_REMOTE_TOKEN or token=; "
             f"not retried: credential errors are not transient)"
         )
+
+
+class CircuitBreaker:
+    """Per-host connection-refused circuit breaker (DESIGN.md §14).
+
+    A dead host refuses connections instantly, but a bounded retry loop
+    still burns its whole budget (fresh connection per attempt) before
+    raising — and every *subsequent* call pays the same budget again. That
+    is exactly wrong for fleet failover, where the router needs a dead
+    replica to fail in microseconds so it can walk to the next ring node.
+
+    State machine: ``RA_REMOTE_BREAKER_FAILS`` consecutive refusals, each
+    within ``RA_REMOTE_BREAKER_WINDOW`` seconds of the previous one, OPEN
+    the circuit — :meth:`check` then raises immediately, no socket touched —
+    for ``RA_REMOTE_BREAKER_COOLDOWN`` seconds. After the cooldown the
+    circuit is half-open: callers flow again, but one more refusal re-opens
+    it instantly (the count stays primed), while one success fully closes
+    it. Only ``ConnectionRefusedError`` trips it: refusal is the one failure
+    mode that is both instant and overwhelmingly likely to persist; slow
+    faults (timeouts, resets mid-entity) keep their normal retry budget."""
+
+    def __init__(self, fails: Optional[int] = None, window: Optional[float] = None,
+                 cooldown: Optional[float] = None):
+        self.fails = max(1, _env_int("RA_REMOTE_BREAKER_FAILS", 3)) if fails is None else int(fails)
+        self.window = _env_float("RA_REMOTE_BREAKER_WINDOW", 10.0) if window is None else float(window)
+        self.cooldown = _env_float("RA_REMOTE_BREAKER_COOLDOWN", 1.0) if cooldown is None else float(cooldown)
+        self._lock = threading.Lock()
+        self._count = 0
+        self._last = 0.0
+        self._open_until = 0.0
+
+    def check(self, what: str = "") -> None:
+        """Raise ``RawArrayError`` at once if the circuit is open; a no-op
+        (closed or half-open) otherwise. Call before touching a socket."""
+        with self._lock:
+            if time.monotonic() < self._open_until:
+                raise RawArrayError(
+                    f"circuit open{f' for {what}' if what else ''}: host refused "
+                    f"{self._count} consecutive connections; failing fast for "
+                    f"{self.cooldown:g}s (knobs RA_REMOTE_BREAKER_FAILS/"
+                    f"WINDOW/COOLDOWN)"
+                )
+
+    def record_refusal(self) -> bool:
+        """Count one connection refusal; returns True when the circuit is
+        (now) open, so retry loops can stop burning their budget."""
+        now = time.monotonic()
+        with self._lock:
+            if now - self._last > self.window:
+                self._count = 0  # stale streak: refusals must cluster
+            self._last = now
+            self._count += 1
+            if self._count >= self.fails:
+                self._count = self.fails  # stay primed while half-open
+                self._open_until = now + self.cooldown
+                return True
+            return False
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._count = 0
+            self._open_until = 0.0
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "consecutive_refusals": self._count,
+                "open": float(time.monotonic() < self._open_until),
+            }
+
+
+_breakers: Dict[Tuple[str, Optional[int]], CircuitBreaker] = {}
+_breakers_lock = threading.Lock()
+
+
+def breaker_for(host: str, port: Optional[int]) -> CircuitBreaker:
+    """Process-wide breaker shared by every client of one ``host:port`` —
+    a reader pool, ``fetch_bytes``, the upload plane, and the fleet router
+    all see (and contribute to) the same host health."""
+    key = (host or "", port)
+    with _breakers_lock:
+        brk = _breakers.get(key)
+        if brk is None:
+            brk = _breakers[key] = CircuitBreaker()
+        return brk
+
+
+def reset_breakers() -> None:
+    """Forget every per-host breaker (tests/benchmarks: cold start)."""
+    with _breakers_lock:
+        _breakers.clear()
 
 
 def default_conns() -> int:
@@ -210,6 +307,7 @@ class RemoteReader:
             parts.scheme, parts.hostname or "", parts.port,
             conns or default_conns(), default_timeout() if timeout is None else timeout,
         )
+        self._breaker = breaker_for(parts.hostname or "", parts.port)
         self.cache = (cache if cache is not None else shared_cache()) if use_cache else None
         # a caller that already holds the object's (size, etag) — e.g. from
         # one stat_dir() listing covering a whole checkpoint — skips the
@@ -247,11 +345,13 @@ class RemoteReader:
     def _stat(self) -> Tuple[int, Optional[str]]:
         err: Optional[BaseException] = None
         for _ in range(self.retries + 1):
+            self._breaker.check(self.url)
             conn = self._pool.acquire()
             try:
                 conn.request("HEAD", self._path)
                 resp = conn.getresponse()
                 resp.read()  # HEAD has no body; settle the connection state
+                self._breaker.record_success()
                 if resp.status != 200:
                     self._pool.release(conn)
                     _raise_for_auth(resp.status, self.url, "stat of")
@@ -265,6 +365,11 @@ class RemoteReader:
                 etag = resp.getheader("ETag")
                 self._pool.release(conn)
                 return int(length), etag
+            except ConnectionRefusedError as e:
+                self._pool.discard(conn)
+                err = e
+                if self._breaker.record_refusal():
+                    break  # circuit open: stop burning the retry budget
             except (OSError, http.client.HTTPException) as e:
                 self._pool.discard(conn)
                 err = e
@@ -280,10 +385,12 @@ class RemoteReader:
         last = offset + length - 1
         err: Optional[BaseException] = None
         for _ in range(self.retries + 1):
+            self._breaker.check(self.url)
             conn = self._pool.acquire()
             try:
                 conn.request("GET", self._path, headers={"Range": f"bytes={offset}-{last}"})
                 resp = conn.getresponse()
+                self._breaker.record_success()
                 try:
                     whole = resp.status == 200 and offset == 0 and length == self.size
                     if resp.status != 206 and not whole:
@@ -318,6 +425,11 @@ class RemoteReader:
                     raise
                 self._pool.release(conn)
                 return
+            except ConnectionRefusedError as e:
+                self._pool.discard(conn)
+                err = e
+                if self._breaker.record_refusal():
+                    break  # circuit open: stop burning the retry budget
             except (OSError, http.client.HTTPException) as e:
                 self._pool.discard(conn)
                 err = e
@@ -545,18 +657,25 @@ def fetch_bytes(url: str, *, timeout: Optional[float] = None, retries: int = 2) 
     if parts.query:
         path += "?" + parts.query
     cls = http.client.HTTPSConnection if parts.scheme == "https" else http.client.HTTPConnection
+    brk = breaker_for(parts.hostname or "", parts.port)
     err: Optional[BaseException] = None
     for _ in range(max(0, retries) + 1):
+        brk.check(url)
         conn = cls(parts.hostname or "", parts.port,
                    timeout=default_timeout() if timeout is None else timeout)
         try:
             conn.request("GET", path)
             resp = conn.getresponse()
             body = resp.read()
+            brk.record_success()
             if resp.status != 200:
                 _raise_for_auth(resp.status, url, "GET of")
                 raise RawArrayError(f"GET {url} failed: HTTP {resp.status}")
             return body
+        except ConnectionRefusedError as e:
+            err = e
+            if brk.record_refusal():
+                break  # circuit open: stop burning the retry budget
         except (OSError, http.client.HTTPException) as e:
             err = e
         finally:
@@ -630,8 +749,10 @@ def _put(
     hdrs["Authorization"] = f"Bearer {tok}"
     hdrs["Content-Length"] = str(total)
     cls = http.client.HTTPSConnection if parts.scheme == "https" else http.client.HTTPConnection
+    brk = breaker_for(parts.hostname or "", parts.port)
     err: Optional[BaseException] = None
     for attempt in range(max(0, retries) + 1):
+        brk.check(url)
         c = conn
         conn = None
         if c is None:
@@ -641,10 +762,19 @@ def _put(
             c.request("PUT", path, body=iter(views), headers=hdrs)
             resp = c.getresponse()
             body = resp.read()
+            brk.record_success()
             if resp.status in (401, 403):
                 c.close()
                 _raise_for_auth(resp.status, url, "upload to")
             return resp.status, body, c
+        except ConnectionRefusedError as e:
+            try:
+                c.close()
+            except Exception:
+                pass
+            err = e
+            if brk.record_refusal() or retries == 0:
+                break  # circuit open: stop burning the retry budget
         except (OSError, http.client.HTTPException) as e:
             try:
                 c.close()

@@ -16,6 +16,9 @@ remote array plane needs:
 * ``GET /header/<path>`` fast path: the decoded RawArray header as JSON —
   one round trip, no range arithmetic on the client;
 * ``HEAD`` for size/ETag discovery;
+* ``GET /healthz`` liveness probe and ``GET /metrics`` thread-safe counters
+  (uptime, request/byte totals, per-path hit counts) — what the fleet
+  router (DESIGN.md §14) health-checks and weights replicas with;
 * authenticated ``PUT /<path>`` upload plane (DESIGN.md §11): whole-object
   upload with atomic publish (temp + rename), plus an append/patch/commit/
   abort session protocol driven by the ``X-RA-Upload`` header that mirrors
@@ -44,13 +47,57 @@ import http.server
 import json
 import os
 import threading
-from typing import Optional, Tuple
+import time
+from typing import Dict, Optional, Tuple
 from urllib.parse import unquote, urlsplit
 
 from ..core import io as raio
 from ..core.spec import RawArrayError
 
 _COPY_CHUNK = 1 << 20
+
+
+class ServerMetrics:
+    """Thread-safe request/byte counters behind ``GET /metrics`` (DESIGN.md
+    §14). Every handler of the threading server runs on its own thread, so
+    all mutation happens under one lock — increments can never be lost to a
+    read-modify-write race. Per-path hit counts are capped at ``max_paths``
+    distinct paths (new paths beyond the cap are counted in the totals but
+    not per-path) so a crawler cannot balloon server memory."""
+
+    def __init__(self, max_paths: int = 1024):
+        self._lock = threading.Lock()
+        self._t0 = time.monotonic()
+        self.requests = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.errors = 0
+        self._max_paths = max_paths
+        self._path_hits: Dict[str, int] = {}
+
+    def record(self, path: str, status: int) -> None:
+        with self._lock:
+            self.requests += 1
+            if status >= 400:
+                self.errors += 1
+            if path in self._path_hits or len(self._path_hits) < self._max_paths:
+                self._path_hits[path] = self._path_hits.get(path, 0) + 1
+
+    def add_bytes(self, out: int = 0, in_: int = 0) -> None:
+        with self._lock:
+            self.bytes_out += out
+            self.bytes_in += in_
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "uptime_s": round(time.monotonic() - self._t0, 3),
+                "requests": self.requests,
+                "bytes_out": self.bytes_out,
+                "bytes_in": self.bytes_in,
+                "errors": self.errors,
+                "paths": dict(self._path_hits),
+            }
 
 
 def file_etag(st: os.stat_result) -> str:
@@ -70,6 +117,34 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
     def log_message(self, fmt, *args):  # quiet by default; --verbose re-enables
         if getattr(self.server, "verbose", False):
             super().log_message(fmt, *args)
+
+    def log_request(self, code="-", size="-"):
+        # every send_response lands here exactly once — the one choke point
+        # where request count and status can be recorded consistently
+        m = getattr(self.server, "metrics", None)
+        if m is not None:
+            try:
+                status = int(code)
+            except (TypeError, ValueError):
+                status = 0
+            m.record(unquote(urlsplit(self.path).path), status)
+        super().log_request(code, size)
+
+    def _send_json(self, obj, status: int = 200, etag: Optional[str] = None) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        if etag is not None:
+            self.send_header("ETag", etag)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except OSError:
+            return
+        m = getattr(self.server, "metrics", None)
+        if m is not None:
+            m.add_bytes(out=len(body))
 
     # ---- helpers -----------------------------------------------------------
     def _resolve(self, relpath: str) -> Optional[str]:
@@ -144,6 +219,16 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         return start, min(stop, size)
 
     def _send_entity(self, path: str, head_only: bool) -> None:
+        # origin-distance simulation (benchmarks/tests only, DESIGN.md §14):
+        # a per-entity-request sleep held under ONE server-wide lock models a
+        # far-away origin with a constrained uplink — concurrent misses at an
+        # edge replica serialize here exactly like they would on a thin WAN
+        # link, which is what makes fleet cache-capacity scaling measurable
+        # on a single box
+        delay = getattr(self.server, "delay_s", 0.0)
+        if delay:
+            with self.server._delay_lock:  # type: ignore[attr-defined]
+                time.sleep(delay)
         try:
             st = os.stat(path)
         except OSError:
@@ -183,13 +268,17 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
             return
         with open(path, "rb") as f:
             self.wfile.flush()  # drain buffered headers before raw socket I/O
-            self._copy_range(f, start, count)
+            sent = self._copy_range(f, start, count)
+        m = getattr(self.server, "metrics", None)
+        if m is not None:
+            m.add_bytes(out=sent)
 
-    def _copy_range(self, f, offset: int, count: int) -> None:
+    def _copy_range(self, f, offset: int, count: int) -> int:
         """Entity bytes to the socket — ``os.sendfile`` zero-copy when the
         platform allows, buffered pread/write otherwise. The fallback resumes
         AFTER whatever sendfile already sent: re-sending from the range start
-        would silently corrupt the fixed-Content-Length entity."""
+        would silently corrupt the fixed-Content-Length entity. Returns bytes
+        actually put on the wire (for the ``/metrics`` counters)."""
         sock_fd = self.connection.fileno()
         sent_total = 0
         try:
@@ -197,9 +286,9 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
                 sent = os.sendfile(sock_fd, f.fileno(), offset + sent_total,
                                    count - sent_total)
                 if sent == 0:
-                    return  # peer went away; nothing more to do
+                    return sent_total  # peer went away; nothing more to do
                 sent_total += sent
-            return
+            return sent_total
         except (AttributeError, OSError):
             pass  # not a disk file / platform without sendfile: fall back
         f.seek(offset + sent_total)
@@ -211,8 +300,10 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
             try:
                 self.wfile.write(chunk)
             except OSError:
-                return
+                return sent_total
             left -= len(chunk)
+            sent_total += len(chunk)
+        return sent_total
 
     def _send_stat_json(self, relpath: str) -> None:
         """``GET /stat/<dir>``: one-round-trip version pin for every regular
@@ -236,15 +327,7 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         except OSError as e:
             self._fail(500, f"stat failed: {e}")
             return
-        body = json.dumps({"files": files}).encode()
-        self.send_response(200)
-        self.send_header("Content-Type", "application/json")
-        self.send_header("Content-Length", str(len(body)))
-        self.end_headers()
-        try:
-            self.wfile.write(body)
-        except OSError:
-            pass
+        self._send_json({"files": files})
 
     def _send_header_json(self, relpath: str) -> None:
         path = self._resolve(relpath)
@@ -257,7 +340,7 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
             self._fail(422, f"not a RawArray file: {e}")
             return
         st = os.stat(path)
-        body = json.dumps(
+        self._send_json(
             {
                 "flags": hdr.flags,
                 "eltype": hdr.eltype,
@@ -268,17 +351,9 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
                 "header_bytes": hdr.nbytes,
                 "dtype": str(hdr.dtype()),
                 "file_size": st.st_size,
-            }
-        ).encode()
-        self.send_response(200)
-        self.send_header("Content-Type", "application/json")
-        self.send_header("ETag", file_etag(st))
-        self.send_header("Content-Length", str(len(body)))
-        self.end_headers()
-        try:
-            self.wfile.write(body)
-        except OSError:
-            pass
+            },
+            etag=file_etag(st),
+        )
 
     # ---- upload plane (DESIGN.md §11) --------------------------------------
     def _resolve_write(self, relpath: str) -> Optional[str]:
@@ -331,6 +406,9 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         if left:
             self._fail(400, "request body shorter than Content-Length")
             return -1
+        m = getattr(self.server, "metrics", None)
+        if m is not None:
+            m.add_bytes(in_=int(length))
         return int(length)
 
     def _ok(self, status: int, path: Optional[str] = None, **extra) -> None:
@@ -436,12 +514,24 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         # endpoint, so the fast path can never shadow served bytes (the
         # client falls back to a ranged header read when JSON parsing fails)
         full = self._resolve(path)
-        if full is None and path.startswith("/header/") and not head_only:
-            self._send_header_json(path[len("/header"):])
-            return
-        if full is None and path.startswith("/stat/") and not head_only:
-            self._send_stat_json(path[len("/stat"):])
-            return
+        if full is None and not head_only:
+            if path.startswith("/header/"):
+                self._send_header_json(path[len("/header"):])
+                return
+            if path.startswith("/stat/"):
+                self._send_stat_json(path[len("/stat"):])
+                return
+            if path == "/healthz":
+                # liveness probe for the fleet router (DESIGN.md §14): tiny,
+                # allocation-free, never touches the disk
+                self._send_json({"ok": True, "role": "origin",
+                                 "uptime_s": self.server.metrics.snapshot()["uptime_s"]})
+                return
+            if path == "/metrics":
+                snap = self.server.metrics.snapshot()
+                snap["role"] = "origin"
+                self._send_json(snap)
+                return
         if full is None:
             self._fail(404, "not found")
             return
@@ -475,12 +565,19 @@ class ArrayServer(http.server.ThreadingHTTPServer):
         *,
         verbose: bool = False,
         upload_token: Optional[str] = None,
+        delay_s: float = 0.0,
     ):
         self.root = os.path.realpath(root)
         if not os.path.isdir(self.root):
             raise RawArrayError(f"server root is not a directory: {root}")
         self.verbose = verbose
         self.upload_token = upload_token
+        self.metrics = ServerMetrics()
+        # delay_s > 0 simulates a far origin for fleet benchmarks/tests
+        # (DESIGN.md §14): each entity request sleeps this long while holding
+        # one server-wide lock, modelling a constrained origin uplink
+        self.delay_s = float(delay_s)
+        self._delay_lock = threading.Lock()
         super().__init__(address, RangeRequestHandler)
 
     @property
@@ -500,12 +597,15 @@ def serve(
     *,
     verbose: bool = False,
     upload_token: Optional[str] = None,
+    delay_s: float = 0.0,
 ) -> ArrayServer:
     """Start an ``ArrayServer`` on a daemon thread; returns the (already
     listening) server — ``server.url`` is ready immediately, ``port=0``
     picks an ephemeral port. Stop with ``server.shutdown()``. Pass
-    ``upload_token`` to enable authenticated uploads (DESIGN.md §11)."""
-    server = ArrayServer(root, (host, port), verbose=verbose, upload_token=upload_token)
+    ``upload_token`` to enable authenticated uploads (DESIGN.md §11);
+    ``delay_s`` simulates origin distance for fleet benchmarks (§14)."""
+    server = ArrayServer(root, (host, port), verbose=verbose,
+                         upload_token=upload_token, delay_s=delay_s)
     t = threading.Thread(target=server.serve_forever, daemon=True, name="ra-remote-srv")
     t.start()
     return server

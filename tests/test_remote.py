@@ -485,6 +485,7 @@ def test_auth_rejection_fails_fast_on_ranged_get(denying_server):
     reader._path = parts.path
     reader.retries = 5
     reader._pool = _ConnPool(parts.scheme, parts.hostname, parts.port, 2, 5.0)
+    reader._breaker = remote.breaker_for(parts.hostname, parts.port)
     reader.etag = None
     reader.size = 1 << 20
     with pytest.raises(remote.RemoteAuthError, match=str(srv.deny_status)):
@@ -509,3 +510,175 @@ def test_auth_error_is_rawarray_error(denying_server):
     assert issubclass(remote.RemoteAuthError, ra.RawArrayError)
     with pytest.raises(ra.RawArrayError):
         remote.fetch_bytes(f"{base}/x")
+
+
+# ------------------------------------------- observability + breaker (§14)
+def test_healthz_and_metrics_json(served):
+    root, base = served
+    arr = np.arange(4096, dtype=np.float32)
+    _write(root, "m.ra", arr)
+    assert np.array_equal(ra.read(f"{base}/m.ra"), arr)
+
+    with urllib.request.urlopen(f"{base}/healthz") as resp:
+        h = json.load(resp)
+    assert h["ok"] is True and h["role"] == "origin" and h["uptime_s"] >= 0
+
+    with urllib.request.urlopen(f"{base}/metrics") as resp:
+        m = json.load(resp)
+    assert m["role"] == "origin"
+    assert m["requests"] > 0 and m["bytes_out"] > 0 and m["errors"] >= 0
+    assert "/m.ra" in m["paths"]
+
+
+def test_metrics_survive_a_concurrent_hammer(served):
+    """Counter mutations race N reader threads against N metrics scrapers;
+    the snapshot must stay internally consistent (no torn counts, no
+    exceptions from the handler thread pool)."""
+    root, base = served
+    arr = np.arange(65536, dtype=np.uint8)
+    _write(root, "h.ra", arr)
+    url = f"{base}/h.ra"
+    errors = []
+
+    def reader():
+        try:
+            for _ in range(5):
+                with remote.RemoteReader(url, use_cache=False) as r:
+                    out = bytearray(1024)
+                    r.pread_into(0, memoryview(out))
+        except Exception as exc:  # pragma: no cover - the assertion payload
+            errors.append(exc)
+
+    def scraper():
+        try:
+            for _ in range(10):
+                with urllib.request.urlopen(f"{base}/metrics") as resp:
+                    m = json.load(resp)
+                assert m["requests"] >= 0 and m["bytes_out"] >= 0
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=t) for t in (reader,) * 4 + (scraper,) * 4]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert not errors
+    with urllib.request.urlopen(f"{base}/metrics") as resp:
+        m = json.load(resp)
+    assert m["requests"] >= 20  # 4 readers x 5 GETs at minimum
+
+
+def test_breaker_opens_after_dead_replica(tmp_path):
+    """Regression for per-host circuit breaking: after K consecutive refused
+    connects the breaker opens and later calls fail in microseconds instead
+    of burning connect+retry budgets against a corpse."""
+    import time as _time
+
+    remote.reset_breakers()
+    arr = np.zeros(512, np.float32)
+    ra.write(os.path.join(str(tmp_path), "b.ra"), arr)
+    server = remote.serve(str(tmp_path), port=0)
+    url = f"{server.url}/b.ra"
+    server.shutdown()
+    server.server_close()
+    try:
+        with pytest.raises(ra.RawArrayError, match="cannot reach"):
+            remote.RemoteReader(url, retries=4, use_cache=False)
+        t0 = _time.perf_counter()
+        with pytest.raises(ra.RawArrayError, match="circuit open"):
+            remote.RemoteReader(url, retries=4, use_cache=False)
+        assert _time.perf_counter() - t0 < 0.25
+        brk = remote.breaker_for(*_host_port(url))
+        assert brk.stats()["open"]
+    finally:
+        remote.reset_breakers()
+
+
+def _host_port(url):
+    from urllib.parse import urlsplit
+
+    parts = urlsplit(url)
+    return parts.hostname, parts.port
+
+
+def test_breaker_half_open_recovers(tmp_path):
+    """A healed host closes the breaker on the first successful probe; a
+    still-dead host re-opens it after ONE refusal (the streak stays primed
+    at the threshold through half-open)."""
+    remote.reset_breakers()
+    os.environ["RA_REMOTE_BREAKER_COOLDOWN"] = "0.05"
+    try:
+        arr = np.arange(256, dtype=np.float32)
+        ra.write(os.path.join(str(tmp_path), "r.ra"), arr)
+        server = remote.serve(str(tmp_path), port=0)
+        host, port = _host_port(server.url)
+        addr = server.server_address
+        url = f"{server.url}/r.ra"
+        server.shutdown()
+        server.server_close()
+        with pytest.raises(ra.RawArrayError, match="cannot reach"):
+            remote.RemoteReader(url, retries=4, use_cache=False)
+        assert remote.breaker_for(host, port).stats()["open"]
+        import time as _time
+
+        _time.sleep(0.06)  # cooldown elapses -> half-open
+        server2 = remote.ArrayServer(str(tmp_path), addr)  # same port heals
+        t = threading.Thread(target=server2.serve_forever, daemon=True)
+        t.start()
+        try:
+            got = ra.read(url)
+            assert np.array_equal(got, arr)
+            assert not remote.breaker_for(host, port).stats()["open"]
+        finally:
+            server2.shutdown()
+            server2.server_close()
+            remote.close_readers()
+            remote.reset_shared_cache()
+    finally:
+        os.environ.pop("RA_REMOTE_BREAKER_COOLDOWN", None)
+        remote.reset_breakers()
+
+
+def test_cache_counters_consistent_under_threads():
+    """hits + misses must equal issued gets even when get/put race from many
+    threads, and hit_ratio stays within [0, 1] — the §14 counter audit."""
+    cache = BlockCache(block_bytes=64, capacity_bytes=64 * 32)
+    gets_per_thread = 400
+    nthreads = 8
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(gets_per_thread):
+            b = int(rng.integers(0, 64))
+            if cache.get("t", b) is None:
+                cache.put("t", b, bytes(64))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(nthreads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == nthreads * gets_per_thread
+    assert 0.0 <= s["hit_ratio"] <= 1.0
+    cache.reset_stats()
+    s2 = cache.stats()
+    assert s2["hits"] == s2["misses"] == s2["evictions"] == s2["invalidations"] == 0
+
+
+def test_overwrite_never_serves_stale_blocks(served):
+    """ETag-tagged cache keys end-to-end: overwrite the file on the origin
+    mid-session; a fresh read must see the new bytes and never mix cached
+    blocks of the old version."""
+    import time as _time
+
+    root, base = served
+    p = _write(root, "s.ra", np.zeros(30_000, np.float32))
+    url = f"{base}/s.ra"
+    assert float(ra.read(url)[0]) == 0.0
+    _time.sleep(0.01)  # mtime tick -> new ETag
+    ra.write(p, np.full(30_000, 7.0, np.float32))
+    remote.close_readers()  # old pinned readers retire; cache stays hot
+    got = ra.read(url)
+    assert np.array_equal(got, np.full(30_000, 7.0, np.float32))

@@ -40,6 +40,9 @@ MODULES = [
     ("repro.data.device_loader", "prefetch-to-device feed + on-device dequant"),
     ("repro.data.synth", "synthetic dataset builders"),
     ("repro.checkpoint.store", "checkpoint save/restore (local + URL)"),
+    ("repro.fleet.router", "consistent-hash router/proxy over replicas"),
+    ("repro.fleet.edge", "read-through edge cache (RAM/disk/origin)"),
+    ("repro.fleet.loadgen", "async trace-replay load generator"),
     ("repro.formats.ingest", "foreign-format -> dataset converters"),
     ("repro.formats.npy", ".npy baseline"),
     ("repro.formats.hdf5min", "minimal HDF5 baseline"),
