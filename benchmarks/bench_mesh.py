@@ -1,0 +1,351 @@
+"""Data-mesh benchmark (DESIGN.md §15) — real processes, real sockets.
+
+Aggregate ingest throughput vs host count against ONE shared loopback
+origin, plus an elastic-membership epoch:
+
+  scaling    1 / 2 / 4 worker PROCESSES (one per mesh host) drain a full
+             epoch of the same remote dataset through shard-ownership
+             loaders. The origin serves with per-request network latency
+             that concurrent requests overlap (``latency_s``), so the
+             aggregate GB/s is latency-bound exactly like a real storage
+             fabric: hosts fetching disjoint shards in parallel must
+             scale. 4 hosts must reach >= 1.5x the 1-host aggregate.
+  elastic    2 hosts start an epoch; at a mid-epoch boundary a third
+             joins via ``DataLoader.repartition`` (survivors) +
+             segment-history handoff (joiner). Every row of the epoch
+             schedule must be delivered EXACTLY ONCE across all three
+             processes, byte-identical to a local gather of the planned
+             row ids (sha256 over the delivered bytes, recomputed by the
+             parent from the claimed ids).
+
+The run *fails loudly* on a duplicated/dropped row, a digest mismatch, or
+missing scaling. Writes ``BENCH_MESH.json`` at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_mesh.py [--full]
+
+(Internally re-invokes itself with ``--worker`` for each simulated host.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+SCALES = {
+    # ~64 shards of 1 KiB rows: enough shards for a 4-host deal, small
+    # enough that the quick mode is CI-friendly; latency_s models the
+    # network RTT every cold shard fetch pays (concurrent, not serialized)
+    "quick": dict(rows=4096, seq=256, shard_rows=64, batch=32, latency_s=0.015),
+    "paper": dict(rows=16384, seq=256, shard_rows=64, batch=64, latency_s=0.015),
+}
+
+
+def _build_dataset(root: str, rows: int, seq: int, shard_rows: int) -> None:
+    from repro.data.dataset import DatasetBuilder
+
+    b = DatasetBuilder(root, {"tokens": ((seq,), np.int32)}, shard_rows=shard_rows)
+    rng = np.random.default_rng(0)
+    ids = np.arange(rows, dtype=np.int32)
+    toks = rng.integers(0, 1 << 15, size=(rows, seq), dtype=np.int32)
+    toks[:, 0] = ids  # row identity rides in the payload
+    b.append(tokens=toks)
+    b.finish()
+
+
+# ---------------------------------------------------------------------------
+# worker process: one mesh host draining (part of) epoch 0
+# ---------------------------------------------------------------------------
+
+
+def _parse_segments(spec: str):
+    segs = []
+    for part in spec.split(";"):
+        step, members = part.split(":", 1)
+        segs.append((int(step), [h for h in members.split(",") if h]))
+    return segs
+
+
+def worker_main(args) -> int:
+    from repro.data import DataLoader, RaDataset
+    from repro.distributed.data_mesh import DataMesh
+
+    segments = _parse_segments(args.segments)
+    mesh = DataMesh(args.host, segments[-1][1])
+    mesh.load_segments(0, segments)
+    ds = RaDataset(args.url)
+    dl = DataLoader(ds, args.batch, seed=args.seed, mesh=mesh)
+    start_step = 0
+    if args.seek:
+        dl.seek(0, args.seek)
+        start_step = args.seek
+    repart_step: Optional[int] = None
+    repart_hosts: List[str] = []
+    if args.repartition:
+        step, members = args.repartition.split(":", 1)
+        repart_step, repart_hosts = int(step), members.split(",")
+
+    # barrier: tell the parent we're ready, then wait for the common gate so
+    # every host's wall clock starts together
+    open(args.out + ".ready", "w").close()
+    while not os.path.exists(args.gate):
+        time.sleep(0.005)
+
+    digest = hashlib.sha256()
+    steps: List[int] = []
+    nbytes = 0
+    t0 = time.perf_counter()
+    while True:
+        spe = dl.steps_per_epoch()
+        bt = next(dl)
+        st = bt["_state"]
+        assert st.epoch == 0, st
+        digest.update(np.ascontiguousarray(bt["tokens"]).tobytes())
+        nbytes += int(bt["tokens"].nbytes)
+        steps.append(st.step)
+        if repart_step is not None and st.step == repart_step - 1:
+            dl.repartition(repart_hosts)
+            spe = dl.steps_per_epoch()
+        if st.step >= spe - 1:
+            break
+    wall = time.perf_counter() - t0
+    dl.stop()
+
+    # claimed row ids: the plan's schedule for the steps actually delivered
+    order = dl._mesh_plan(0).host_order(args.host)
+    B = args.batch
+    claimed = np.concatenate([order[s * B : (s + 1) * B] for s in steps])
+    assert int(claimed.min()) >= 0, "delivered a step outside membership"
+    with open(args.out, "w") as f:
+        json.dump(
+            {
+                "host": args.host,
+                "steps": steps,
+                "rows": [int(r) for r in claimed],
+                "digest": digest.hexdigest(),
+                "bytes": nbytes,
+                "wall_s": wall,
+                "start_step": start_step,
+            },
+            f,
+        )
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# parent: spawn hosts, gate, verify exactly-once + byte-exact, time
+# ---------------------------------------------------------------------------
+
+
+def _spawn(workdir: str, url: str, name: str, *, host, segments, batch, seed,
+           seek=0, repartition=None):
+    out = os.path.join(workdir, f"{name}.json")
+    cmd = [
+        sys.executable, os.path.abspath(__file__), "--worker",
+        "--url", url, "--host", host, "--segments", segments,
+        "--batch", str(batch), "--seed", str(seed),
+        "--out", out, "--gate", os.path.join(workdir, "gate"),
+    ]
+    if seek:
+        cmd += ["--seek", str(seek)]
+    if repartition:
+        cmd += ["--repartition", repartition]
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [os.path.abspath(src), env.get("PYTHONPATH", "")])
+    )
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    return proc, out
+
+
+def _run_wave(workdir: str, specs) -> List[Dict]:
+    """Launch worker specs, release the gate once all are ready, collect."""
+    gate = os.path.join(workdir, "gate")
+    if os.path.exists(gate):
+        os.unlink(gate)
+    procs = [(name, *_spawn(workdir, url, name, **kw)) for name, url, kw in specs]
+    deadline = time.time() + 120
+    while any(not os.path.exists(out + ".ready") for _, _, out in procs):
+        for _, p, _ in procs:
+            if p.poll() not in (None, 0):
+                _, err = p.communicate()
+                raise RuntimeError(f"mesh worker died before ready: {err[-2000:]}")
+        if time.time() > deadline:
+            raise RuntimeError("mesh workers never became ready")
+        time.sleep(0.01)
+    open(gate, "w").close()
+    results = []
+    for name, p, out in procs:
+        _, err = p.communicate(timeout=300)
+        if p.returncode != 0:
+            raise RuntimeError(f"mesh worker {name} failed: {err[-2000:]}")
+        with open(out) as f:
+            results.append(json.load(f))
+        os.unlink(out)
+        os.unlink(out + ".ready")
+    return results
+
+
+def _verify_wave(ds, results: List[Dict], expect_rows: int) -> int:
+    """Exactly-once + byte-exact: the union of claimed rows is duplicate-free
+    and of the expected size, and each worker's delivered-bytes digest equals
+    a local gather of its claimed ids."""
+    allr = np.concatenate([np.asarray(r["rows"], dtype=np.int64) for r in results])
+    if len(np.unique(allr)) != len(allr):
+        raise RuntimeError("mesh delivered a row twice across hosts")
+    if len(allr) != expect_rows:
+        raise RuntimeError(
+            f"mesh delivered {len(allr)} rows, schedule says {expect_rows}"
+        )
+    for r in results:
+        ref = ds.gather(np.asarray(r["rows"], dtype=np.int64))["tokens"]
+        want = hashlib.sha256(np.ascontiguousarray(ref).tobytes()).hexdigest()
+        if want != r["digest"]:
+            raise RuntimeError(f"host {r['host']}: delivered bytes != planned rows")
+    return len(allr)
+
+
+def bench_mesh(full: bool = False) -> List[Dict]:
+    from repro import remote
+    from repro.data import RaDataset
+    from repro.distributed.data_mesh import DataMesh
+
+    s = SCALES["paper" if full else "quick"]
+    rows: List[Dict] = []
+    tmp = tempfile.mkdtemp(prefix="ra_mesh_")
+    ds_root = os.path.join(tmp, "ds")
+    _build_dataset(ds_root, s["rows"], s["seq"], s["shard_rows"])
+    ds = RaDataset(ds_root)  # parent-side verification reads locally
+    server = remote.serve(tmp, latency_s=s["latency_s"])
+    url = f"{server.url}/ds"
+    B, seed = s["batch"], 3
+
+    try:
+        # -- scaling: full epoch at 1 / 2 / 4 hosts -------------------------
+        agg = {}
+        for H in (1, 2, 4):
+            hosts = [f"h{i}" for i in range(H)]
+            segments = "0:" + ",".join(hosts)
+            plan = DataMesh(hosts[0], hosts).plan(
+                [sh.rows for sh in ds.shards], seed=seed, epoch=0, batch_size=B
+            )
+            specs = [
+                (f"scale{H}_{h}", url,
+                 dict(host=h, segments=segments, batch=B, seed=seed))
+                for h in hosts
+            ]
+            results = _run_wave(tmp, specs)
+            n = _verify_wave(ds, results, plan.steps() * B * H)
+            total = sum(r["bytes"] for r in results)
+            wall = max(r["wall_s"] for r in results)
+            agg[H] = total / wall / 1e9
+            rows.append({
+                "bench": "mesh_scaling", "hosts": H,
+                "agg_gbs": round(agg[H], 4), "max_wall_s": round(wall, 4),
+                "rows_delivered": n,
+                "dropped_tail_rows": plan.dropped_rows(),
+                "exactly_once": True, "byte_exact": True,
+            })
+        scale = agg[4] / agg[1]
+        rows.append({
+            "bench": "mesh_scaling_summary",
+            "gbs_1host": round(agg[1], 4), "gbs_4host": round(agg[4], 4),
+            "scaling_4_over_1": round(scale, 3),
+        })
+        if scale < 1.5:
+            raise RuntimeError(
+                f"mesh aggregate GB/s scaled only {scale:.2f}x at 4 hosts "
+                f"(need >= 1.5x): {agg}"
+            )
+
+        # -- elastic: host joins mid-epoch, exactly-once preserved ----------
+        start, final = ["h0", "h1"], ["h0", "h1", "h2"]
+        p0 = DataMesh("h0", start).plan(
+            [sh.rows for sh in ds.shards], seed=seed, epoch=0, batch_size=B
+        )
+        T = max(1, p0.steps() // 2)
+        elastic = DataMesh("h0", final)
+        elastic.load_segments(0, [(0, start), (T, final)])
+        eplan = elastic.plan(
+            [sh.rows for sh in ds.shards], seed=seed, epoch=0, batch_size=B
+        )
+        repart = f"{T}:" + ",".join(final)
+        seg0 = "0:" + ",".join(start)
+        seg_full = f"{seg0};{T}:" + ",".join(final)
+        specs = [
+            ("el_h0", url, dict(host="h0", segments=seg0, batch=B, seed=seed,
+                                repartition=repart)),
+            ("el_h1", url, dict(host="h1", segments=seg0, batch=B, seed=seed,
+                                repartition=repart)),
+            ("el_h2", url, dict(host="h2", segments=seg_full, batch=B,
+                                seed=seed, seek=T)),
+        ]
+        results = _run_wave(tmp, specs)
+        expect = T * B * 2 + (eplan.steps() - T) * B * 3
+        n = _verify_wave(ds, results, expect)
+        rows.append({
+            "bench": "mesh_elastic", "boundary_step": T,
+            "steps_total": eplan.steps(), "rows_delivered": n,
+            "dropped_tail_rows": eplan.dropped_rows(),
+            "exactly_once": True, "byte_exact": True,
+        })
+        return rows
+    finally:
+        server.shutdown()
+
+
+def write_bench_mesh(rows: List[Dict], path: str = None) -> str:
+    path = path or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_MESH.json"
+    )
+    payload = {
+        "description": "Data mesh: aggregate ingest GB/s vs host count over "
+                       "one loopback origin (concurrent per-request latency), "
+                       "plus an elastic mid-epoch membership change with "
+                       "exactly-once + byte-exact delivery asserted "
+                       "(DESIGN.md §15)",
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return os.path.abspath(path)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    p.add_argument("--url")
+    p.add_argument("--host")
+    p.add_argument("--segments", help="epoch-0 history: 'step:h0,h1;step:h0,h1,h2'")
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--seed", type=int, default=3)
+    p.add_argument("--seek", type=int, default=0)
+    p.add_argument("--repartition", default=None, help="'step:h0,h1,h2'")
+    p.add_argument("--out")
+    p.add_argument("--gate")
+    args = p.parse_args(argv)
+    if args.worker:
+        return worker_main(args)
+    rows = bench_mesh(full=args.full)
+    for r in rows:
+        keys = [k for k in r if k != "bench"]
+        print(r["bench"] + "," + ",".join(f"{k}={r[k]}" for k in keys))
+    print(f"# wrote {write_bench_mesh(rows)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|remote|fleet|compress|ingest|device|formats|images|pipeline|checkpoint|coldstart|roofline")
+                   help="engine|remote|fleet|mesh|compress|ingest|device|formats|images|pipeline|checkpoint|coldstart|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -47,7 +47,7 @@ def main(argv=None) -> None:
     wanted = (
         args.only.split(",")
         if args.only
-        else ["engine", "remote", "fleet", "compress", "ingest", "device", "formats",
+        else ["engine", "remote", "fleet", "mesh", "compress", "ingest", "device", "formats",
               "images", "pipeline", "checkpoint", "coldstart", "roofline"]
     )
 
@@ -68,6 +68,14 @@ def main(argv=None) -> None:
         _print_rows(rows)
         all_rows += rows
         print(f"# wrote {write_bench_fleet(rows)}")
+    if "mesh" in wanted:
+        # imported here: spawns worker subprocesses against a loopback origin
+        from benchmarks.bench_mesh import bench_mesh, write_bench_mesh
+
+        rows = bench_mesh(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_mesh(rows)}")
     if "compress" in wanted:
         rows = bench_compress(full=args.full)
         _print_rows(rows)

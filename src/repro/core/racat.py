@@ -437,6 +437,37 @@ def ingest_files(
     return int(hdr.shape[0]), hdr
 
 
+def format_owners(table: dict) -> str:
+    """Render ``data_mesh.owners_table`` output: per-shard assignment rows,
+    per-host byte totals, and the imbalance ratio."""
+    lines = [f"{'shard':>5}  {'rows':>10}  {'bytes':>14}  owner"]
+    for s in table["shards"]:
+        lines.append(
+            f"{s['shard']:>5}  {s['rows']:>10}  {s['bytes']:>14}  {s['owner']}"
+        )
+    lines.append("")
+    lines.append(f"{'host':<16}  {'shards':>6}  {'rows':>10}  {'bytes':>14}")
+    for h in table["hosts"]:
+        t = table["per_host"][h]
+        lines.append(
+            f"{h:<16}  {t['shards']:>6}  {t['rows']:>10}  {t['bytes']:>14}"
+        )
+    lines.append("")
+    lines.append(
+        f"epoch {table['epoch']}: {len(table['shards'])} shards, "
+        f"{table['total_rows']} rows, {table['total_bytes']} bytes, "
+        f"imbalance {table['imbalance']:.3f} (max host bytes / mean)"
+    )
+    return "\n".join(lines)
+
+
+def _parse_hosts(spec: str) -> List[str]:
+    names = [h.strip() for h in spec.split(",") if h.strip()]
+    if len(names) == 1 and names[0].isdigit():
+        return [f"host{i}" for i in range(int(names[0]))]
+    return names
+
+
 _EPILOG = """\
 subcommands:
   header     print the decoded numeric header
@@ -452,6 +483,11 @@ subcommands:
   compress   rewrite as chunk-compressed:  racat compress <src> <dst>
   ingest     stream-concatenate .npy/.ra sources into one file or URL:
              racat ingest <dst> <src...> [--codec C] [--crc32]
+  owners     shard -> host ownership table for a dataset manifest (or
+             sharded index.json) under the data mesh (DESIGN.md §15):
+             racat owners <manifest> --hosts N [--epoch E] [--vnodes V]
+             prints (shard, rows, bytes, owner) rows, per-host byte
+             totals, and the imbalance ratio — ZERO payload reads
 
 every subcommand accepts http(s):// URLs where a byte-range server is
 serving (ingest destinations need a write-enabled server + RA_REMOTE_TOKEN).
@@ -474,7 +510,7 @@ def main(argv=None) -> int:
     p.add_argument(
         "cmd",
         choices=["header", "data", "meta", "od", "verify", "inspect",
-                 "compress", "ingest"],
+                 "compress", "ingest", "owners"],
     )
     p.add_argument("path", help="file path or http(s):// URL "
                    "(compress: source; ingest: destination)")
@@ -490,6 +526,15 @@ def main(argv=None) -> int:
                    help="also write a file-level CRC trailer (compress/ingest)")
     p.add_argument("--batch-rows", type=int, default=None,
                    help="rows per streamed ingest batch (default: ~32 MiB worth)")
+    p.add_argument("--hosts", default=None,
+                   help="owners: host count (N -> host0..host{N-1}) or a "
+                   "comma-separated list of host names")
+    p.add_argument("--epoch", type=int, default=0,
+                   help="owners: epoch whose ownership deal to print "
+                   "(RA_MESH_EPOCH_REOWN re-deals shards per epoch)")
+    p.add_argument("--vnodes", type=int, default=None,
+                   help="owners: virtual nodes per host on the ring "
+                   "(default: RA_MESH_VNODES or 64)")
     args = p.parse_args(argv)
     if args.rest and args.cmd not in ("compress", "ingest"):
         p.error(f"{args.cmd} takes exactly one path "
@@ -526,6 +571,21 @@ def main(argv=None) -> int:
             )
             print(f"OK {args.path}: {rows} rows {list(hdr.shape)} "
                   f"{hdr.dtype()} ({hdr.data_length} stored bytes)")
+            return 0
+
+        if args.cmd == "owners":
+            if not args.hosts:
+                p.error("owners needs --hosts N (or --hosts a,b,c)")
+            hosts = _parse_hosts(args.hosts)
+            if not hosts:
+                p.error(f"--hosts {args.hosts!r} names no hosts")
+            # deferred: the mesh module (numpy + the fleet's hash ring only)
+            from ..distributed.data_mesh import owners_table
+
+            table = owners_table(
+                args.path, hosts, epoch=args.epoch, vnodes=args.vnodes
+            )
+            print(format_owners(table))
             return 0
 
         if args.cmd == "inspect":

@@ -86,6 +86,20 @@ class ShardIndex:
             files=tuple(d["files"]),
         )
 
+    def rows_per_shard(self) -> Tuple[int, ...]:
+        """Row count of each shard along the sharded axis — the unit of
+        distribution for the data mesh's ownership map (DESIGN.md §15)."""
+        return tuple(b - a for a, b in zip(self.offsets, self.offsets[1:]))
+
+    def row_nbytes(self) -> int:
+        """Bytes one row (one index along ``axis``) occupies on disk — index
+        arithmetic only, no shard is opened."""
+        per = 1
+        for i, d in enumerate(self.shape):
+            if i != self.axis:
+                per *= int(d)
+        return per * np.dtype(self.dtype).itemsize
+
 
 def _shard_name(i: int) -> str:
     return f"shard_{i:05d}.ra"

@@ -297,9 +297,25 @@ class RaDataset:
         # table or None) for positioned reads; src is an int fd locally, a
         # pooled RemoteReader for URLs
         self._fds: Dict[Tuple[int, str], Tuple[Any, int, int, Any, Any]] = {}
+        # shard -> access count, bumped on EVERY fd/mmap lookup: the witness
+        # that a mesh host never touches a shard it doesn't own (§15)
+        self._shard_touch: Dict[int, int] = {}
 
     def __len__(self) -> int:
         return self.total_rows
+
+    # ---- shard-touch accounting (DESIGN.md §15) ---------------------------
+    def shard_touches(self) -> Dict[int, int]:
+        """Per-shard access counts (every fd/mmap lookup, local or remote):
+        the observable a mesh test asserts to prove this host fetched bytes
+        only from shards it owns."""
+        return dict(self._shard_touch)
+
+    def shards_touched(self) -> List[int]:
+        return sorted(self._shard_touch)
+
+    def reset_shard_touches(self) -> None:
+        self._shard_touch.clear()
 
     def close(self) -> None:
         for fd, *_ in self._fds.values():
@@ -325,6 +341,7 @@ class RaDataset:
                 "(gather serves every row via ranged reads instead)"
             )
         key = (shard_idx, field)
+        self._shard_touch[shard_idx] = self._shard_touch.get(shard_idx, 0) + 1
         if key not in self._mmaps:
             path = os.path.join(self.root, self.shards[shard_idx].files[field])
             self._mmaps[key] = ra.memmap(path)
@@ -337,6 +354,7 @@ class RaDataset:
         URL. A chunked shard carries its decoded chunk table so row spans
         map to chunk runs without re-reading the trailer."""
         key = (shard_idx, field)
+        self._shard_touch[shard_idx] = self._shard_touch.get(shard_idx, 0) + 1
         if key not in self._fds:
             path = _join(self.root, self.shards[shard_idx].files[field])
             hdr = ra.header_of(path)

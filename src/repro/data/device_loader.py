@@ -19,7 +19,13 @@ paper's read-bandwidth win evaporates at the device boundary.
 * ``stats()`` folds ``h2d_s`` (time inside device transfers), ``h2d_bytes``
   (bytes actually moved) and ``device_wait_s`` (consumer starved on the
   device queue) into the wrapped loader's counters, so the train loop's
-  straggler monitor sees the whole feed path.
+  straggler monitor sees the whole feed path;
+* wrapping a mesh loader (``DataLoader(mesh=...)``, DESIGN.md §15) turns on
+  **global assembly**: each host's local batch is split over its addressable
+  devices and declared as the local shards of one global ``jax.Array`` via
+  ``jax.make_array_from_single_device_arrays`` (data axis = mesh hosts ×
+  local devices), so the sharded train-step factories in
+  ``repro.distributed.steps`` consume mesh batches unchanged.
 
 Safety: the feeder blocks until each transfer completes before pulling the
 next host batch, so the wrapped loader's ``reuse_buffers`` ring is never
@@ -71,6 +77,7 @@ class DeviceLoader:
         device: Any = None,
         interpret: Optional[bool] = None,
         block_rows: Optional[int] = None,
+        global_arrays: Optional[bool] = None,
     ):
         import jax  # deferred: keep `repro.data` importable without jax
 
@@ -81,6 +88,24 @@ class DeviceLoader:
             )
         self._jax = jax
         self.loader = loader
+        mesh = getattr(loader, "mesh", None)
+        # a mesh loader assembles global jax.Arrays by default; override only
+        # to keep plain per-host arrays (e.g. non-collective eval loops)
+        self.global_arrays = (mesh is not None) if global_arrays is None else bool(global_arrays)
+        if self.global_arrays:
+            if mesh is None:
+                raise RawArrayError(
+                    "global_arrays=True requires DataLoader(mesh=...)"
+                )
+            if mesh.host_count > 1 and jax.process_count() != mesh.host_count:
+                raise RawArrayError(
+                    f"global assembly needs one jax process per mesh host: "
+                    f"mesh has {mesh.host_count} hosts but "
+                    f"jax.process_count()={jax.process_count()} (use "
+                    f"data_mesh.make_global_batch directly to simulate)"
+                )
+        self._gsharding: Any = None  # lazy data_mesh.data_sharding()
+        self._gdevices: Any = None
         # device decode replaces host decode: raw uint8 over the wire
         loader.dequant = False
         self.bufs = max(1, bufs if bufs is not None else default_device_bufs())
@@ -143,24 +168,28 @@ class DeviceLoader:
                     batch = next(loader)
                     state = batch.pop("_state", None)
                     t0 = time.perf_counter()
-                    moved = {
-                        k: jax.device_put(
-                            np.array(v, copy=True) if detach else v, dev
-                        )
-                        for k, v in batch.items()
-                    }
-                    # the transfer must COMPLETE before the next host batch
-                    # may recycle the staging ring buffer under it
-                    jax.block_until_ready(list(moved.values()))
+                    if self.global_arrays:
+                        moved = self._globalize(batch, detach)
+                    else:
+                        moved = {
+                            k: jax.device_put(
+                                np.array(v, copy=True) if detach else v, dev
+                            )
+                            for k, v in batch.items()
+                        }
+                        # the transfer must COMPLETE before the next host
+                        # batch may recycle the staging ring buffer under it
+                        jax.block_until_ready(list(moved.values()))
                     self._h2d_s += time.perf_counter() - t0
                     self._h2d_bytes += sum(
                         int(v.nbytes) for v in batch.values()
                     )
                     self._h2d_n += 1
-                    # on-device decode is part of the FEED pipeline: dispatch
-                    # the fused dequant here so the consumer's critical path
-                    # is nothing but q.get() + its train step
-                    self._dequant_on_device(moved)
+                    if not self.global_arrays:
+                        # on-device decode is part of the FEED pipeline:
+                        # dispatch the fused dequant here so the consumer's
+                        # critical path is nothing but q.get() + train step
+                        self._dequant_on_device(moved)
                     item: Any = (moved, state)
                 except Exception as e:  # surface in consumer (sticky there)
                     item = e
@@ -175,6 +204,80 @@ class DeviceLoader:
 
         self._thread = threading.Thread(target=run, daemon=True, name="ra-h2d")
         self._thread.start()
+
+    # ---- global assembly (DESIGN.md §15) ------------------------------------
+    def _quant_params_on(self, device) -> Dict[str, Tuple[Any, Any, np.dtype]]:
+        """Per-field dequant parameters COMMITTED to ``device`` — committed
+        operands keep the fused kernel's dispatch on each shard's own device
+        in the global-assembly path."""
+        cache = getattr(self, "_quant_dev_on", None)
+        if cache is None:
+            cache = self._quant_dev_on = {}
+        per = cache.get(device)
+        if per is None:
+            per = cache[device] = {}
+            for f, info in getattr(self.loader.ds, "quant", {}).items():
+                shape, _ = self.loader.ds.logical_spec(f)
+                scale, bias = info.channel_params(int(shape[-1]))
+                per[f] = (
+                    self._jax.device_put(scale, device),
+                    self._jax.device_put(bias, device),
+                    np.dtype(info.orig_dtype),
+                )
+        return per
+
+    def _globalize(self, batch: Dict[str, np.ndarray], detach: bool) -> Dict[str, Any]:
+        """Local host batch → global ``jax.Array``s: split rows over this
+        host's addressable devices, device_put each block (uint8 for
+        quantized fields), dequant each block on ITS device, then declare
+        the blocks as the addressable shards of the
+        ``(host_count * local_B, ...)``-shaped global array. The assembly
+        itself is metadata-only — no gather, no cross-host traffic."""
+        jax = self._jax
+        if self._gsharding is None:
+            from ..distributed import data_mesh
+
+            self._gsharding = data_mesh.data_sharding()
+            self._gdevices = jax.local_devices()
+        devs = self._gdevices
+        nd = len(devs)
+        host_count = self.loader.mesh.host_count
+        out: Dict[str, Any] = {}
+        for k, v in batch.items():
+            n = int(v.shape[0])
+            if n % nd:
+                raise RawArrayError(
+                    f"{k}: local batch of {n} rows does not split over "
+                    f"{nd} local devices"
+                )
+            per = n // nd
+            shards = [
+                jax.device_put(
+                    np.array(v[i * per : (i + 1) * per], copy=True)
+                    if detach
+                    else v[i * per : (i + 1) * per],
+                    d,
+                )
+                for i, d in enumerate(devs)
+            ]
+            # transfers must COMPLETE before the staging ring may recycle
+            jax.block_until_ready(shards)
+            if k in getattr(self.loader.ds, "quant", {}):
+                from ..kernels import ops  # deferred: pallas import is heavy
+
+                shards = [
+                    ops.dequant_rows(
+                        s, *self._quant_params_on(d)[k][:2],
+                        out_dtype=self._quant_params_on(d)[k][2],
+                        block_rows=self._block_rows, interpret=self._interpret,
+                    )
+                    for s, d in zip(shards, devs)
+                ]
+            gshape = (n * host_count,) + tuple(shards[0].shape[1:])
+            out[k] = jax.make_array_from_single_device_arrays(
+                gshape, self._gsharding, shards
+            )
+        return out
 
     # ---- iteration ----------------------------------------------------------
     def __iter__(self) -> Iterator[Dict[str, Any]]:
@@ -258,7 +361,7 @@ class DeviceLoader:
             old.ds, old.batch_size, seed=old.seed, shuffle=old.shuffle,
             host_id=old.host_id, host_count=old.host_count,
             prefetch=old.prefetch, reuse_buffers=old.reuse_buffers,
-            naive=old.naive, dequant=old.dequant,
+            naive=old.naive, dequant=old.dequant, mesh=old.mesh,
         )
         new.state = LoaderState(old.state.epoch, old.state.step)
         return new

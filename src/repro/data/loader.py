@@ -4,6 +4,13 @@
   derives the same global order and takes its own slice.
 * **Resumability**: `LoaderState` (epoch, step) checkpoints with the model;
   `DataLoader.restore(state)` resumes mid-epoch exactly.
+* **Data mesh** (``mesh=DataMesh(...)``, DESIGN.md §15): shard-ownership
+  partitioning replaces the contiguous ``host_range`` split — this host
+  materializes only the rows of shards it owns under the mesh's
+  deterministic global shuffle, steps per epoch is the global minimum over
+  hosts (lockstep-safe), and ``repartition()`` applies a membership change
+  mid-epoch with no row duplicated or dropped. ``LoaderState`` then also
+  carries the epoch's segment history, so elastic epochs are resumable.
 * **Prefetch**: a background thread keeps ``prefetch`` batches ready, so
   host-side reads overlap device compute (the paper's I/O latency win,
   applied where it matters in training).
@@ -43,6 +50,7 @@ from typing import Any, Dict, Iterator, Optional
 
 import numpy as np
 
+from ..core.spec import RawArrayError
 from .dataset import RaDataset
 
 
@@ -50,13 +58,24 @@ from .dataset import RaDataset
 class LoaderState:
     epoch: int = 0
     step: int = 0  # batches already emitted within this epoch
+    # mesh loaders only: the epoch's segment history [(start_step, [hosts])]
+    # — everything a (re)joining host needs to rebuild the exact schedule
+    mesh_segments: Optional[list] = None
 
-    def to_dict(self) -> Dict[str, int]:
-        return {"epoch": self.epoch, "step": self.step}
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"epoch": self.epoch, "step": self.step}
+        if self.mesh_segments is not None:
+            d["mesh_segments"] = [[int(t), list(m)] for t, m in self.mesh_segments]
+        return d
 
     @classmethod
-    def from_dict(cls, d: Dict[str, int]) -> "LoaderState":
-        return cls(epoch=int(d["epoch"]), step=int(d["step"]))
+    def from_dict(cls, d: Dict[str, Any]) -> "LoaderState":
+        segs = d.get("mesh_segments")
+        return cls(
+            epoch=int(d["epoch"]),
+            step=int(d["step"]),
+            mesh_segments=[(int(t), tuple(m)) for t, m in segs] if segs else None,
+        )
 
 
 class DataLoader:
@@ -74,6 +93,7 @@ class DataLoader:
         reuse_buffers: bool = False,
         naive: bool = False,
         dequant: bool = True,
+        mesh: Optional[Any] = None,
     ):
         if not drop_last:
             raise NotImplementedError("fixed-shape training wants drop_last")
@@ -82,6 +102,11 @@ class DataLoader:
                 "naive=True gathers via local mmaps and cannot stream a "
                 "remote dataset; use the default engine path"
             )
+        if mesh is not None and naive:
+            raise ValueError("naive=True is the seed baseline; it has no mesh mode")
+        self.mesh = mesh  # repro.distributed.data_mesh.DataMesh (duck-typed)
+        if mesh is not None:
+            host_id, host_count = mesh.host_index, mesh.host_count
         self.ds = dataset
         self.batch_size = batch_size
         self.seed = seed
@@ -98,6 +123,8 @@ class DataLoader:
         # DeviceLoader turns this off and decodes on device instead
         self.dequant = dequant
         self._ring: list = []  # preallocated batch dicts when reuse_buffers
+        self._plans: Dict[int, Any] = {}  # epoch -> EpochPlan (mesh only)
+        self._last_state: Optional[LoaderState] = None  # last DELIVERED batch
         self.state = LoaderState()
         self._wait_s = 0.0
         self._produce_s = 0.0
@@ -114,7 +141,27 @@ class DataLoader:
         start, stop = self.ds.host_range(self.host_id, self.host_count)
         return np.arange(start, stop)
 
+    def _mesh_plan(self, epoch: int):
+        """The mesh's pure epoch schedule (DESIGN.md §15), memoized — plans
+        are invalidated whenever the segment history can change (restore /
+        repartition / seek)."""
+        plan = self._plans.get(epoch)
+        if plan is None:
+            plan = self.mesh.plan(
+                [s.rows for s in self.ds.shards],
+                seed=self.seed,
+                epoch=epoch,
+                batch_size=self.batch_size,
+                shuffle=self.shuffle,
+            )
+            if len(self._plans) > 4:
+                self._plans.clear()
+            self._plans[epoch] = plan
+        return plan
+
     def _epoch_order(self, epoch: int) -> np.ndarray:
+        if self.mesh is not None:
+            return self._mesh_plan(epoch).host_order(self.mesh.host)
         rows = self._host_rows()
         if not self.shuffle:
             return rows
@@ -134,7 +181,25 @@ class DataLoader:
         return cached[1]
 
     def steps_per_epoch(self) -> int:
-        return len(self._host_rows()) // self.batch_size
+        """Steps the CURRENT epoch runs — the GLOBAL MINIMUM over hosts, so
+        lockstep collectives never hang on one host's remainder tail (the
+        ``host_range`` split hands the last host the extra rows; the floor
+        division used to give it a different step count). The dropped tail
+        is exposed in ``stats()['dropped_tail_rows']``."""
+        return self._spe(self.state.epoch)
+
+    def _spe(self, epoch: int) -> int:
+        if self.mesh is not None:
+            # mesh epochs re-deal ownership, so the minimum-owner step count
+            # is genuinely per-epoch (and per segment history)
+            return self._mesh_plan(epoch).steps()
+        return (self.ds.total_rows // self.host_count) // self.batch_size
+
+    def _dropped_tail(self, epoch: int) -> int:
+        """Rows the epoch never delivers GLOBALLY (identical on every host)."""
+        if self.mesh is not None:
+            return self._mesh_plan(epoch).dropped_rows()
+        return self.ds.total_rows - self._spe(epoch) * self.batch_size * self.host_count
 
     # ---- synchronous iteration ---------------------------------------------
     def _make_ring(self) -> list:
@@ -171,7 +236,16 @@ class DataLoader:
             order = self._cached_order(epoch)
         lo = step * self.batch_size
         idx = order[lo : lo + self.batch_size]
-        if self.naive and self.shuffle:
+        if self.mesh is not None:
+            if idx.size < self.batch_size or int(idx.min()) < 0:
+                raise RawArrayError(
+                    f"host {self.mesh.host!r} is not a mesh member at epoch "
+                    f"{epoch} step {step} (left the membership?)"
+                )
+            # owned rows are non-contiguous even with shuffle=False — always
+            # gather; the planner opens only this host's owned shards
+            batch = self.ds.gather(idx, out=out)
+        elif self.naive and self.shuffle:
             batch = self.ds.gather_naive(idx)
         elif self.shuffle:
             batch = self.ds.gather(idx, out=out)
@@ -203,6 +277,9 @@ class DataLoader:
         if isinstance(batch, Exception):
             self._exc = batch
             raise batch
+        # the last DELIVERED position anchors repartition(): queued-but-
+        # undelivered prefetch batches are discarded and their rows re-dealt
+        self._last_state = batch["_state"]
         return batch
 
     # ---- prefetch thread ---------------------------------------------------
@@ -221,12 +298,30 @@ class DataLoader:
             ring = self._ring
 
         def run():
-            spe = self.steps_per_epoch()
             epoch, step = self.state.epoch, self.state.step
+            spe = self._spe(epoch)
             pos = 0
             while not stop.is_set():
+                if spe <= 0:
+                    # surface instead of spinning: with a mesh this means the
+                    # smallest owner holds fewer than batch_size rows
+                    e: Exception = RawArrayError(
+                        f"epoch {epoch} has zero steps (batch_size="
+                        f"{self.batch_size} exceeds the smallest host's rows)"
+                    )
+                    while not stop.is_set():
+                        try:
+                            q.put(e, timeout=0.2)
+                            break
+                        except queue.Full:
+                            continue
+                    return
                 if step >= spe:
                     epoch, step = epoch + 1, 0
+                    # a mesh re-deals ownership per epoch: the minimum-owner
+                    # step count must be re-derived at every rollover
+                    spe = self._spe(epoch)
+                    continue
                 try:
                     t0 = time.perf_counter()
                     buf = None
@@ -243,7 +338,11 @@ class DataLoader:
                         except queue.Full:
                             continue
                     return
-                b["_state"] = LoaderState(epoch, step)
+                b["_state"] = (
+                    LoaderState(epoch, step)
+                    if self.mesh is None
+                    else LoaderState(epoch, step, self.mesh.segments_for(epoch))
+                )
                 step += 1
                 while not stop.is_set():
                     try:
@@ -256,12 +355,53 @@ class DataLoader:
         self._thread.start()
 
     def restore(self, state: LoaderState) -> None:
-        """Resume exactly after the batch `state` describes."""
+        """Resume exactly after the batch `state` describes. A mesh state
+        carries the epoch's segment history, so restoring mid-elastic-epoch
+        rebuilds the identical schedule the original fleet was running."""
         self.stop()
+        if self.mesh is not None and state.mesh_segments:
+            self.mesh.load_segments(state.epoch, state.mesh_segments)
+        self._invalidate_plans()
         self.state = LoaderState(state.epoch, state.step + 1)
-        spe = self.steps_per_epoch()
-        if self.state.step >= spe:
+        if self.state.step >= self._spe(state.epoch):
             self.state = LoaderState(state.epoch + 1, 0)
+
+    def seek(self, epoch: int, step: int) -> None:
+        """Position so the NEXT batch emitted is ``(epoch, step)`` — the
+        joining-host entry point: build a ``DataMesh``, load the handed-over
+        segment history (or call ``mesh.repartition``), then seek to the
+        boundary step."""
+        self.stop()
+        self._invalidate_plans()
+        self.state = LoaderState(int(epoch), int(step))
+
+    def repartition(self, hosts) -> LoaderState:
+        """Apply a mesh membership change effective at the next UNDELIVERED
+        batch: the prefetch thread is stopped and its queued batches are
+        discarded (their rows stay unconsumed in the segment replay, so they
+        re-deal under the new ownership — exactly-once is preserved w.r.t.
+        batches actually delivered), the mesh records the segment boundary,
+        and prefetch restarts lazily under the new plan. No epoch restart.
+        Returns the boundary position every surviving host must agree on."""
+        if self.mesh is None:
+            raise RawArrayError("repartition() requires a mesh loader")
+        last = self._last_state
+        if last is None:
+            nxt = LoaderState(self.state.epoch, self.state.step)
+        else:
+            nxt = LoaderState(last.epoch, last.step + 1)
+            if nxt.step >= self._spe(last.epoch):
+                nxt = LoaderState(last.epoch + 1, 0)
+        self.stop()
+        self.mesh.repartition(hosts, epoch=nxt.epoch, step=nxt.step)
+        self._invalidate_plans()
+        self.state = LoaderState(nxt.epoch, nxt.step)
+        return self.state
+
+    def _invalidate_plans(self) -> None:
+        self._plans.clear()
+        self._order_memo = None
+        self._last_state = None
 
     def stop(self, join_timeout: float = 2.0) -> None:
         """Stop the prefetch thread and VERIFY it exited. If the join times
@@ -292,6 +432,15 @@ class DataLoader:
             "loader_wait_s": self._wait_s,
             "loader_produce_s": self._produce_s,
             "batches": float(self._n_batches),
+            # host identity + the lockstep tail (global, identical on every
+            # host) — inputs to data_mesh.aggregate_stats
+            "host_id": float(
+                self.mesh.host_index if self.mesh is not None else self.host_id
+            ),
+            "host_count": float(
+                self.mesh.host_count if self.mesh is not None else self.host_count
+            ),
+            "dropped_tail_rows": float(self._dropped_tail(self.state.epoch)),
         }
         io_stats = getattr(self.ds, "io_stats", None)
         if io_stats is not None:

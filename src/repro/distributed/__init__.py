@@ -1,1 +1,21 @@
-"""Distributed runtime: meshes, sharding rules, train/serve step factories."""
+"""Distributed runtime: meshes, sharding rules, train/serve step factories.
+
+``data_mesh`` (DESIGN.md §15) is the data plane's view of the process
+mesh: shard-ownership partitioning, the deterministic global shuffle, and
+elastic membership. It stays numpy-only at import time; the jax-dependent
+assembly helpers defer their import.
+"""
+
+from typing import Any
+
+__all__ = ["DataMesh"]
+
+
+def __getattr__(name: str) -> Any:
+    # lazy: most distributed users (partition/steps) never need the data
+    # mesh, and data_mesh pulls in the fleet's hash ring
+    if name == "DataMesh":
+        from .data_mesh import DataMesh
+
+        return DataMesh
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -41,6 +41,16 @@ def main(argv=None) -> int:
              "fetch/decode/dequant/H2D under the RA_COLDSTART_INFLIGHT "
              "budget; 'naive' is the phase-by-phase baseline",
     )
+    p.add_argument(
+        "--mesh-hosts", default=None,
+        help="data-mesh membership (DESIGN.md §15): comma-separated host "
+             "names, one jax process per host, listed in process-index "
+             "order (default: RA_MESH_HOSTS)",
+    )
+    p.add_argument(
+        "--mesh-host", default=None,
+        help="this process's mesh host name (default: RA_MESH_HOST)",
+    )
     args = p.parse_args(argv)
 
     from repro.configs import get_config
@@ -53,11 +63,27 @@ def main(argv=None) -> int:
     os.makedirs(args.workdir, exist_ok=True)
     ds_root = args.dataset or os.path.join(args.workdir, "dataset")
     if not os.path.exists(os.path.join(ds_root, "manifest.json")):
-        make_token_dataset(ds_root, n_docs=2048, seq_len=min(256, cfg.max_seq), vocab=cfg.vocab)
+        # shard_rows small enough that a mesh has shards to deal out
+        make_token_dataset(ds_root, n_docs=2048, seq_len=min(256, cfg.max_seq),
+                           vocab=cfg.vocab, shard_rows=256)
+    # data mesh (DESIGN.md §15): shard-ownership ingest across jax processes
+    mesh = None
+    if args.mesh_hosts or args.mesh_host:
+        from repro.distributed.data_mesh import DataMesh
+
+        names = [h.strip() for h in (args.mesh_hosts or "").split(",") if h.strip()]
+        if not names or not args.mesh_host:
+            p.error("--mesh-hosts and --mesh-host must be given together")
+        mesh = DataMesh(args.mesh_host, names)
+    else:
+        from repro.distributed.data_mesh import DataMesh
+
+        mesh = DataMesh.from_env()  # RA_MESH_HOSTS / RA_MESH_HOST, else None
     # reuse_buffers is safe here: the train loop copies each batch to device
     # (jnp.asarray) before requesting the next one; with --device-feed the
     # DeviceLoader's feeder confirms each transfer before recycling the ring
-    loader = DataLoader(RaDataset(ds_root), args.batch, seed=args.seed, reuse_buffers=True)
+    loader = DataLoader(RaDataset(ds_root), args.batch, seed=args.seed,
+                        reuse_buffers=True, mesh=mesh)
     if args.device_feed:
         from repro.data import DeviceLoader
 

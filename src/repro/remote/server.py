@@ -229,6 +229,13 @@ class RangeRequestHandler(http.server.BaseHTTPRequestHandler):
         if delay:
             with self.server._delay_lock:  # type: ignore[attr-defined]
                 time.sleep(delay)
+        # latency_s models per-request NETWORK latency: concurrent requests
+        # overlap their sleeps (no lock), so N parallel clients see ~one RTT
+        # per wave — the signal the mesh's host-count scaling benchmark
+        # measures (DESIGN.md §15), vs delay_s's serialized-uplink model
+        latency = getattr(self.server, "latency_s", 0.0)
+        if latency:
+            time.sleep(latency)
         try:
             st = os.stat(path)
         except OSError:
@@ -566,6 +573,7 @@ class ArrayServer(http.server.ThreadingHTTPServer):
         verbose: bool = False,
         upload_token: Optional[str] = None,
         delay_s: float = 0.0,
+        latency_s: float = 0.0,
     ):
         self.root = os.path.realpath(root)
         if not os.path.isdir(self.root):
@@ -578,6 +586,9 @@ class ArrayServer(http.server.ThreadingHTTPServer):
         # one server-wide lock, modelling a constrained origin uplink
         self.delay_s = float(delay_s)
         self._delay_lock = threading.Lock()
+        # latency_s > 0 sleeps per request WITHOUT the lock — concurrent
+        # network latency (requests in flight overlap), for mesh scaling
+        self.latency_s = float(latency_s)
         super().__init__(address, RangeRequestHandler)
 
     @property
@@ -598,14 +609,18 @@ def serve(
     verbose: bool = False,
     upload_token: Optional[str] = None,
     delay_s: float = 0.0,
+    latency_s: float = 0.0,
 ) -> ArrayServer:
     """Start an ``ArrayServer`` on a daemon thread; returns the (already
     listening) server — ``server.url`` is ready immediately, ``port=0``
     picks an ephemeral port. Stop with ``server.shutdown()``. Pass
     ``upload_token`` to enable authenticated uploads (DESIGN.md §11);
-    ``delay_s`` simulates origin distance for fleet benchmarks (§14)."""
+    ``delay_s`` simulates origin distance for fleet benchmarks (§14, one
+    serialized uplink), ``latency_s`` per-request network latency that
+    concurrent requests overlap (mesh scaling, §15)."""
     server = ArrayServer(root, (host, port), verbose=verbose,
-                         upload_token=upload_token, delay_s=delay_s)
+                         upload_token=upload_token, delay_s=delay_s,
+                         latency_s=latency_s)
     t = threading.Thread(target=server.serve_forever, daemon=True, name="ra-remote-srv")
     t.start()
     return server

@@ -39,6 +39,7 @@ MODULES = [
     ("repro.data.loader", "training DataLoader"),
     ("repro.data.device_loader", "prefetch-to-device feed + on-device dequant"),
     ("repro.data.synth", "synthetic dataset builders"),
+    ("repro.distributed.data_mesh", "shard-ownership data mesh (elastic multi-host ingest)"),
     ("repro.checkpoint.store", "checkpoint save/restore (local + URL)"),
     ("repro.fleet.router", "consistent-hash router/proxy over replicas"),
     ("repro.fleet.edge", "read-through edge cache (RAM/disk/origin)"),
