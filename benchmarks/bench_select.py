@@ -1,0 +1,149 @@
+"""Predicate-pushdown benchmark (DESIGN.md §16) — payload bytes touched by
+``RaDataset.select(where=...)`` vs a full-scan gather + numpy filter, over
+a chunk-compressed dataset with a sorted (clustered) key column:
+
+  selectivity × {100%, 10%, 1%}
+
+The observable is the codec's chunk-read counters (``codec.stats()``):
+stored payload bytes actually fetched + decompressed. Every design point
+is first checked BYTE-IDENTICAL against the numpy reference filter — the
+run fails loudly on any divergence, so the byte savings are never bought
+with a wrong answer. The acceptance gate (ISSUE PR 9) is asserted here:
+at 1% selectivity the pushdown path must touch >= 10x fewer payload bytes
+than the full scan. Writes ``BENCH_SELECT.json`` at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_select.py [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+import repro.core as ra
+from repro.core import codec as chunked_codec
+from repro.core.stats import col
+from repro.data import DatasetBuilder, RaDataset
+
+# (rows, payload row width in float32 elems, chunk_bytes)
+SCALES = {"paper": (400_000, 64, 1 << 16), "quick": (120_000, 32, 1 << 15)}
+
+SELECTIVITIES = [1.0, 0.1, 0.01]
+
+
+def _build(root: str, nrows: int, width: int, chunk_bytes: int) -> None:
+    rng = np.random.default_rng(0)
+    b = DatasetBuilder(
+        root,
+        {"t": ((), "int64"), "x": ((width,), "float32")},
+        shard_rows=nrows // 4,
+        chunked=True,
+        chunk_bytes=chunk_bytes,
+    )
+    # sorted key column — the clustered layout pushdown exploits (time-
+    # ordered logs, sorted ids); payload is incompressible-ish noise
+    t = np.arange(nrows, dtype=np.int64)
+    x = rng.standard_normal((nrows, width)).astype(np.float32)
+    step = max(1, nrows // 64)
+    for lo in range(0, nrows, step):
+        b.append(t=t[lo:lo + step], x=x[lo:lo + step])
+    b.finish()
+
+
+def bench_select(full: bool = False) -> List[Dict]:
+    nrows, width, chunk_bytes = SCALES["paper" if full else "quick"]
+    d = tempfile.mkdtemp(prefix="ra-bench-select-")
+    try:
+        root = os.path.join(d, "ds")
+        _build(root, nrows, width, chunk_bytes)
+        ds = RaDataset(root)
+        t_all = ds.rows(0, nrows)["t"]
+
+        rows: List[Dict] = []
+        for sel in SELECTIVITIES:
+            take = max(1, int(nrows * sel))
+            lo = (nrows - take) // 2  # mid-file window: prunes both ends
+            where = (col("t") >= int(t_all[lo])) & (col("t") < int(t_all[lo] + take))
+
+            # full scan + numpy filter (the reference — and the baseline)
+            chunked_codec.reset_stats()
+            t0 = time.perf_counter()
+            batch = ds.rows(0, nrows)
+            mask = (batch["t"] >= int(t_all[lo])) & (batch["t"] < int(t_all[lo] + take))
+            ref = {f: batch[f][mask] for f in ("t", "x")}
+            full_s = time.perf_counter() - t0
+            full_bytes = chunked_codec.stats()["chunk_stored_bytes"]
+
+            chunked_codec.reset_stats()
+            t0 = time.perf_counter()
+            got = ds.select(where=where, fields=["t", "x"])
+            sel_s = time.perf_counter() - t0
+            sel_bytes = chunked_codec.stats()["chunk_stored_bytes"]
+
+            for f in ("t", "x"):
+                if ref[f].tobytes() != got[f].tobytes():
+                    raise AssertionError(
+                        f"select(where) diverges from numpy filter on "
+                        f"field {f!r} at selectivity {sel}")
+
+            rows.append({
+                "bench": "select",
+                "selectivity": sel,
+                "rows_matched": int(mask.sum()),
+                "rows_total": nrows,
+                "full_scan_payload_bytes": int(full_bytes),
+                "select_payload_bytes": int(sel_bytes),
+                "byte_reduction": (full_bytes / sel_bytes) if sel_bytes else float("inf"),
+                "full_scan_s": round(full_s, 4),
+                "select_s": round(sel_s, 4),
+            })
+
+        # the PR 9 acceptance gate: >= 10x fewer payload bytes at 1%
+        one_pct = next(r for r in rows if r["selectivity"] == 0.01)
+        if not one_pct["byte_reduction"] >= 10.0:
+            raise AssertionError(
+                "pushdown touched only {:.2f}x fewer payload bytes at 1% "
+                "selectivity (gate: >= 10x): {} vs {}".format(
+                    one_pct["byte_reduction"],
+                    one_pct["select_payload_bytes"],
+                    one_pct["full_scan_payload_bytes"]))
+        return rows
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def write_bench_select(rows: List[Dict]) -> str:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = os.path.join(repo, "BENCH_SELECT.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return out
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args(argv)
+    rows = bench_select(full=args.full)
+    for r in rows:
+        print(
+            "select,selectivity={:.2f},matched={},full_bytes={},select_bytes={},"
+            "reduction={:.1f}x,full_s={:.3f},select_s={:.3f}".format(
+                r["selectivity"], r["rows_matched"],
+                r["full_scan_payload_bytes"], r["select_payload_bytes"],
+                r["byte_reduction"], r["full_scan_s"], r["select_s"]))
+    print(f"# wrote {write_bench_select(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (the default; explicit flag for CI smoke runs)")
     p.add_argument("--only", default=None,
-                   help="engine|remote|fleet|mesh|compress|ingest|device|formats|images|pipeline|checkpoint|coldstart|roofline")
+                   help="engine|remote|fleet|mesh|compress|ingest|select|device|formats|images|pipeline|checkpoint|coldstart|roofline")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -47,7 +47,7 @@ def main(argv=None) -> None:
     wanted = (
         args.only.split(",")
         if args.only
-        else ["engine", "remote", "fleet", "mesh", "compress", "ingest", "device", "formats",
+        else ["engine", "remote", "fleet", "mesh", "compress", "ingest", "select", "device", "formats",
               "images", "pipeline", "checkpoint", "coldstart", "roofline"]
     )
 
@@ -86,6 +86,13 @@ def main(argv=None) -> None:
         _print_rows(rows)
         all_rows += rows
         print(f"# wrote {write_bench_ingest(rows)}")
+    if "select" in wanted:
+        from benchmarks.bench_select import bench_select, write_bench_select
+
+        rows = bench_select(full=args.full)
+        _print_rows(rows)
+        all_rows += rows
+        print(f"# wrote {write_bench_select(rows)}")
     if "device" in wanted:
         # imported here: the device feed pulls in jax/pallas, which the pure
         # I/O benches should not pay for

@@ -11,6 +11,7 @@ Public API mirrors the paper's reference implementations::
 from . import codec
 from . import engine
 from . import quant
+from . import stats
 from .header import Header, decode_header, read_header
 from .io import (
     RaWriter,
@@ -25,8 +26,18 @@ from .io import (
     read_into,
     read_metadata,
     read_quant_metadata,
+    read_stats,
     write,
     write_like,
+)
+from .stats import (
+    ChunkStats,
+    Expr,
+    StatsAccumulator,
+    col,
+    compute_stats,
+    split_stats,
+    stats_supported,
 )
 from .quant import QuantInfo, decode_quant_metadata, quant_params, resolve_quant_spec
 from .sharded import (
@@ -55,9 +66,18 @@ from .spec import (
 )
 
 __all__ = [
+    "ChunkStats",
+    "Expr",
     "Header",
     "QuantInfo",
+    "StatsAccumulator",
     "codec",
+    "col",
+    "compute_stats",
+    "read_stats",
+    "split_stats",
+    "stats",
+    "stats_supported",
     "decode_quant_metadata",
     "engine",
     "quant",

@@ -344,6 +344,7 @@ class ChunkStreamCompressor:
         self,
         codec: Union[int, str, None] = None,
         chunk_bytes: Optional[int] = None,
+        stats_dtype=None,
     ):
         self._codec = get_codec(codec)
         self._cbytes = default_chunk_bytes() if chunk_bytes is None else int(chunk_bytes)
@@ -354,10 +355,22 @@ class ChunkStreamCompressor:
         self._lens: List[int] = []
         self._crcs: List[int] = []
         self._raw_consumed = 0  # raw bytes already turned into stored chunks
+        # per-chunk statistics (DESIGN.md §16) accumulate as raw bytes stream
+        # through, so stats cost no extra pass over the payload
+        if stats_dtype is not None:
+            from . import stats as _stats_mod
+
+            self._stats_acc = _stats_mod.StatsAccumulator(stats_dtype, self._cbytes)
+        else:
+            self._stats_acc = None
 
     @property
     def codec_id(self) -> int:
         return self._codec.codec_id
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self._cbytes
 
     def _compress(self, mv: memoryview) -> List[bytes]:
         """Compress ``mv`` chunk-parallel (chunk boundaries at multiples of
@@ -390,6 +403,8 @@ class ChunkStreamCompressor:
         mv = data if isinstance(data, memoryview) else memoryview(data)
         if mv.format != "B" or mv.ndim != 1:
             mv = mv.cast("B")
+        if self._stats_acc is not None:
+            self._stats_acc.feed(mv)
         parts: List[bytes] = []
         cb = self._cbytes
         if not self._buf and mv.nbytes >= cb:
@@ -434,6 +449,14 @@ class ChunkStreamCompressor:
             stored_lens=lens,
             crcs=np.array(self._crcs, dtype="<u8"),
         )
+
+    def chunk_stats(self):
+        """The accumulated per-chunk statistics (DESIGN.md §16), or ``None``
+        when the compressor was built without ``stats_dtype``. Call after
+        ``flush`` so the final short chunk is included."""
+        if self._stats_acc is None:
+            return None
+        return self._stats_acc.finish()
 
 
 # ------------------------------------------------------------------- decode

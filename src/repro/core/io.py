@@ -45,6 +45,7 @@ import numpy as np
 from . import codec as chunked_codec
 from . import engine
 from . import quant as quant_schema
+from . import stats as stats_mod
 from .header import Header, decode_header, read_header
 from .spec import (
     FLAG_BIG_ENDIAN,
@@ -113,8 +114,16 @@ def write(
     codec: Optional[str] = None,
     chunk_bytes: Optional[int] = None,
     quantize: Optional[str] = None,
+    stats: bool = False,
 ) -> int:
     """Write ``arr`` as a RawArray file. Returns bytes written.
+
+    ``stats=True`` (DESIGN.md §16) additionally emits a ``rastats``
+    block — per-chunk min/max/NaN-count/count — at the head of the
+    trailing metadata region, enabling predicate pushdown
+    (``RaDataset.select``) to prune chunks without touching the payload.
+    Requires a bool/int/float dtype; for quantized files the statistics
+    describe the STORED uint8 codes.
 
     ``quantize="u8"`` (DESIGN.md §12) stores a float array as uint8 codes
     with per-channel affine calibration over the last axis; the
@@ -178,6 +187,7 @@ def write(
             arr = arr.astype(arr.dtype.newbyteorder("<"), copy=False)
     payload = _as_bytes_view(arr)
     trailer_views: list = []  # chunk table, between payload and metadata
+    table = None
     if chunked:
         flags |= FLAG_CHUNKED
         parts, table = chunked_codec.compress_chunked(
@@ -190,6 +200,13 @@ def write(
         stored_views = [memoryview(zlib.compress(bytes(payload), level=1))]
     else:
         stored_views = [payload]
+    if stats:
+        if not stats_mod.stats_supported(arr.dtype):
+            raise RawArrayError(f"stats=True unsupported for dtype {arr.dtype}")
+        scb = table.chunk_bytes if table is not None \
+            else chunked_codec.default_chunk_bytes()
+        trailer_views.append(
+            memoryview(stats_mod.compute_stats(arr, scb).encode()))
     if crc32:
         flags |= FLAG_CRC32_TRAILER
     data_length = sum(v.nbytes for v in stored_views)
@@ -326,12 +343,15 @@ class RaWriter:
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
         metadata: Optional[bytes] = None,
+        stats: bool = False,
         sink=None,
     ):
         chunked = chunked or codec is not None or chunk_bytes is not None
         dt = np.dtype(dtype)
         if dt.byteorder == ">":
             raise RawArrayError("RaWriter writes little-endian files only")
+        if stats and not stats_mod.stats_supported(dt):
+            raise RawArrayError(f"stats=True unsupported for dtype {dt}")
         self._dtype = dt
         self._row_shape = tuple(int(d) for d in row_shape)
         self._row_nbytes = dt.itemsize
@@ -350,8 +370,18 @@ class RaWriter:
         proto = np.empty((0,) + self._row_shape, dtype=dt)
         self._hdr0 = Header.for_array(proto, flags=self._flags, data_length=0)
         self._compressor = (
-            chunked_codec.ChunkStreamCompressor(codec=codec, chunk_bytes=chunk_bytes)
+            chunked_codec.ChunkStreamCompressor(
+                codec=codec, chunk_bytes=chunk_bytes,
+                stats_dtype=dt if stats else None,
+            )
             if chunked
+            else None
+        )
+        # plain mode computes stats itself (write_rows); chunked mode lets
+        # the stream compressor accumulate them as chunks form (DESIGN.md §16)
+        self._stats_acc = (
+            stats_mod.StatsAccumulator(dt, chunked_codec.default_chunk_bytes())
+            if stats and not chunked
             else None
         )
         self._buf = bytearray()  # plain mode: pending raw bytes, flushed in slabs
@@ -402,6 +432,8 @@ class RaWriter:
             self._rows += n
             return self._rows
         view = _as_bytes_view(a)
+        if self._stats_acc is not None:
+            self._stats_acc.add(a)
         if self._compressor is not None:
             for part in self._compressor.feed(view):
                 self._append_payload(part)
@@ -424,7 +456,8 @@ class RaWriter:
     def finalize(self, metadata: Optional[bytes] = None) -> Header:
         """Flush everything, emit trailers, patch the header, publish.
 
-        Order (DESIGN.md §11): final short chunk → chunk table → metadata →
+        Order (DESIGN.md §11): final short chunk → chunk table → ``rastats``
+        block (``stats=True``, DESIGN.md §16) → metadata →
         CRC trailer → header patch (``dims[0]``, ``data_length``) → durable
         commit (fsync + atomic rename). Returns the final ``Header``.
         Calling it twice — or after ``abort`` — raises."""
@@ -435,10 +468,18 @@ class RaWriter:
             self._append_payload(memoryview(self._buf))
             self._buf = bytearray()
         tail: List[memoryview] = []
+        stats_block = None
         if self._compressor is not None:
             for part in self._compressor.flush():
                 self._append_payload(part)
             tail.append(memoryview(self._compressor.table().encode()))
+            cstats = self._compressor.chunk_stats()
+            if cstats is not None:
+                stats_block = cstats.encode()
+        elif self._stats_acc is not None:
+            stats_block = self._stats_acc.finish().encode()
+        if stats_block is not None:
+            tail.append(memoryview(stats_block))
         if meta:
             tail.append(memoryview(meta))
         if self._crc32:
@@ -566,7 +607,9 @@ def read(
         arr = arr.astype(dtype.newbyteorder("<"))
     arr = arr.reshape(hdr.shape)
     if with_metadata:
-        return arr, meta
+        # the rastats block rides at the head of the metadata region; user
+        # metadata is what follows it (DESIGN.md §16)
+        return arr, stats_mod.split_stats(meta)[1]
     return arr
 
 
@@ -602,7 +645,7 @@ def read_chunked(
         if len(meta) < 4:
             raise RawArrayError("CRC flag set but trailer missing")
         meta = meta[:-4]
-    return out, meta
+    return out, stats_mod.split_stats(meta)[1]
 
 
 def _zlib_decompress_into(fd: int, hdr: Header, mv: memoryview, file_size: int) -> None:
@@ -712,7 +755,52 @@ def read_metadata(path: PathLike) -> bytes:
         tail = f.read()
     if hdr.flags & FLAG_CRC32_TRAILER:
         tail = tail[:-4]
-    return tail
+    return stats_mod.split_stats(tail)[1]
+
+
+def _read_stats_src(src, hdr: Header, *, size: int,
+                    table_nbytes: Optional[int] = None):
+    """Decode the ``rastats`` block from a positioned-read source (int fd
+    or ``RemoteReader``) with two small tail reads — the payload is never
+    touched (DESIGN.md §16). Returns ``ChunkStats`` or ``None``."""
+    if table_nbytes is None:
+        table_nbytes = (
+            chunked_codec.table_nbytes(src, hdr)
+            if hdr.flags & FLAG_CHUNKED
+            else 0
+        )
+    start = hdr.nbytes + hdr.data_length + table_nbytes
+    end = size - (4 if hdr.flags & FLAG_CRC32_TRAILER else 0)
+    avail = end - start
+    if avail < stats_mod.HEAD_BYTES:
+        return None
+    head = bytearray(stats_mod.HEAD_BYTES)
+    engine.pread_into(src, start, head)
+    if not bytes(head).startswith(stats_mod.RASTATS_MAGIC_BYTES):
+        return None
+    block_bytes = int.from_bytes(head[16:24], "little")
+    block = bytearray(min(max(block_bytes, stats_mod.HEAD_BYTES), avail))
+    block[: len(head)] = head
+    if len(block) > len(head):
+        engine.pread_into(src, start + len(head), memoryview(block)[len(head):])
+    return stats_mod.split_stats(bytes(block))[0]
+
+
+def read_stats(path: PathLike):
+    """Read only the per-chunk statistics block (DESIGN.md §16).
+
+    Cheap for both local files (header + two tail reads) and
+    ``http(s)://`` URLs (header fast path + tail ranges, never the
+    payload). Returns :class:`repro.core.stats.ChunkStats`, or ``None``
+    for files without a (valid) ``rastats`` block — corrupt blocks warn
+    and return ``None`` so callers degrade to a full scan."""
+    if is_url(path):
+        return _remote().remote_read_stats(path)
+    with open(path, "rb") as f:
+        hdr = read_header(f)
+        return _read_stats_src(
+            f.fileno(), hdr, size=os.fstat(f.fileno()).st_size
+        )
 
 
 def read_quant_metadata(path: PathLike):

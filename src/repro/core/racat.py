@@ -31,6 +31,7 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import warnings
 import zlib
 from typing import Iterator, List, Optional, Tuple
 
@@ -38,6 +39,7 @@ import numpy as np
 
 from . import codec as chunked_codec
 from . import io as raio
+from . import stats as stats_mod
 from .header import Header, decode_header
 from .io import header_of, is_url, read, read_metadata
 from .spec import (
@@ -100,8 +102,11 @@ def verify_file(path: str) -> List[str]:
     list of problems (empty = file is internally consistent).
 
     Checks: header parse + magic, dims/data_length consistency, payload
-    present in full, CRC32 trailer recomputation, and — for zlib payloads —
-    that the *decompressed* size matches ``shape × elbyte``."""
+    present in full, CRC32 trailer recomputation, for zlib payloads that
+    the *decompressed* size matches ``shape × elbyte``, and — when a
+    ``rastats`` block is present (DESIGN.md §16) — that per-chunk
+    min/max/NaN/count statistics recomputed from the decoded payload match
+    the stored block exactly."""
     problems: List[str] = []
     try:
         blob = _blob(path)
@@ -145,6 +150,84 @@ def verify_file(path: str) -> List[str]:
                 )
     if hdr.flags & FLAG_CHUNKED:
         problems += _verify_chunked(hdr, payload, trailer)
+    problems += _verify_stats(hdr, payload, trailer)
+    return problems
+
+
+def _verify_stats(hdr: Header, payload: bytes, trailer: bytes) -> List[str]:
+    """Recompute the ``rastats`` block from the decoded payload and compare
+    (DESIGN.md §16). Absent block -> nothing to check; damaged framing or
+    statistics that disagree with the data are reported as problems —
+    readers would full-scan either way, but a disagreement means the
+    payload was rewritten without refreshing the stats."""
+    meta = trailer
+    if hdr.flags & FLAG_CHUNKED:
+        try:
+            table = chunked_codec.ChunkTable.decode(
+                trailer, logical_nbytes=hdr.logical_nbytes,
+                stored_nbytes=hdr.data_length)
+        except RawArrayError:
+            return []  # already reported by _verify_chunked
+        meta = trailer[table.nbytes:]
+    if hdr.flags & FLAG_CRC32_TRAILER:
+        meta = meta[:-4] if len(meta) >= 4 else b""
+    try:
+        st, _ = stats_mod.split_stats(meta, strict=True)
+    except RawArrayError as e:
+        return [str(e)]
+    if st is None:
+        return []
+    dt = hdr.dtype()
+    if not stats_mod.stats_supported(dt):
+        return [f"rastats block present for unsupported dtype {dt}"]
+    # decode to raw logical bytes (chunk-by-chunk, whole-zlib, or as-is)
+    if hdr.flags & FLAG_CHUNKED:
+        try:
+            table = chunked_codec.ChunkTable.decode(
+                trailer, logical_nbytes=hdr.logical_nbytes,
+                stored_nbytes=hdr.data_length)
+            codec = chunked_codec.get_codec(table.codec_id)
+            raw = b"".join(
+                codec.decompress(
+                    payload[int(table.stored_offsets[i]):
+                            int(table.stored_offsets[i]) + int(table.stored_lens[i])])
+                for i in range(table.nchunks))
+        except Exception:
+            return []  # chunk damage already reported by _verify_chunked
+    elif hdr.flags & FLAG_ZLIB:
+        try:
+            raw = zlib.decompress(payload)
+        except zlib.error:
+            return []  # already reported above
+    else:
+        raw = payload
+    try:
+        acc = stats_mod.StatsAccumulator(dt, st.chunk_bytes)
+        acc.feed(raw)
+        got = acc.finish()
+    except RawArrayError as e:
+        return [f"rastats recompute failed: {e}"]
+    problems: List[str] = []
+    if got.nchunks != st.nchunks:
+        problems.append(
+            f"rastats window count {st.nchunks} disagrees with payload "
+            f"(recomputed {got.nchunks} windows of {st.chunk_bytes} bytes)")
+        return problems
+    for name, a, b, eq in [
+        ("count", st.counts, got.counts, np.array_equal),
+        ("nan_count", st.nan_counts, got.nan_counts, np.array_equal),
+        ("min", st.mins, got.mins,
+         lambda x, y: np.array_equal(x, y, equal_nan=True)),
+        ("max", st.maxs, got.maxs,
+         lambda x, y: np.array_equal(x, y, equal_nan=True)),
+    ]:
+        if not eq(np.asarray(a), np.asarray(b)):
+            bad = [i for i in range(st.nchunks)
+                   if not eq(np.asarray(a[i:i + 1]), np.asarray(b[i:i + 1]))]
+            problems.append(
+                f"rastats {name} mismatch in window(s) {bad[:8]}"
+                f"{'...' if len(bad) > 8 else ''}: stored statistics are "
+                "stale for this payload")
     return problems
 
 
@@ -219,6 +302,16 @@ def inspect_file(path: str) -> str:
         meta_len -= table.nbytes
     if hdr.flags & FLAG_CRC32_TRAILER:
         meta_len -= 4
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        st = raio.read_stats(path)
+    if st is not None:
+        meta_len -= st.nbytes
+        lines.append(
+            f"stats        {st.nchunks} windows x {st.chunk_bytes} bytes "
+            f"(rastats v{st.version}, {st.nbytes} bytes)")
+    else:
+        lines.append("stats        none")
     lines.append(f"metadata     {max(0, meta_len)} bytes")
     if table is None:
         lines.append("chunks       none (payload is not chunk-compressed)")
@@ -238,6 +331,31 @@ def inspect_file(path: str) -> str:
             f"chunk stored min/mean/max  {int(lens.min())}/"
             f"{int(lens.mean())}/{int(lens.max())}"
         )
+    return "\n".join(lines)
+
+
+def stats_file(path: str, limit: int = 0) -> str:
+    """Per-chunk ``rastats`` table (DESIGN.md §16) — header/table/tail
+    ranged reads only, never the payload; works on local paths and URLs.
+    Raises RawArrayError when the file carries no statistics block."""
+    st = raio.read_stats(path)
+    if st is None:
+        raise RawArrayError(
+            "no rastats block (written before PR 9, or with stats=False); "
+            "predicates on this file degrade to a full scan")
+    lines = [
+        f"version      {st.version}",
+        f"chunk_bytes  {st.chunk_bytes}",
+        f"nchunks      {st.nchunks}",
+        f"  {'win':>5}  {'count':>10}  {'nans':>10}  {'min':>24}  {'max':>24}",
+    ]
+    n = st.nchunks if limit <= 0 else min(limit, st.nchunks)
+    for i in range(n):
+        lines.append(
+            f"  {i:>5}  {int(st.counts[i]):>10}  {int(st.nan_counts[i]):>10}  "
+            f"{st.mins[i]:>24.17g}  {st.maxs[i]:>24.17g}")
+    if n < st.nchunks:
+        lines.append(f"  ... ({st.nchunks} windows total)")
     return "\n".join(lines)
 
 
@@ -475,7 +593,11 @@ subcommands:
   meta       dump the trailing user metadata to stdout
   od         print the od(1) commands that introspect this file (paper §3.2)
   verify     recompute every integrity signal (header consistency, CRC32
-             trailer, zlib size, chunk-table geometry + per-chunk CRCs)
+             trailer, zlib size, chunk-table geometry + per-chunk CRCs,
+             rastats min/max/NaN/count vs the decoded payload)
+  stats      print the per-chunk rastats table (DESIGN.md §16) — ranged
+             reads only, the payload is never fetched; exits 1 when the
+             file has no statistics block
   inspect    header + metadata length + chunk-table summary; pointed at a
              checkpoint directory (or its manifest.json), prints the
              per-leaf dtype/shape/flags/codec/quant audit instead —
@@ -510,7 +632,7 @@ def main(argv=None) -> int:
     p.add_argument(
         "cmd",
         choices=["header", "data", "meta", "od", "verify", "inspect",
-                 "compress", "ingest", "owners"],
+                 "stats", "compress", "ingest", "owners"],
     )
     p.add_argument("path", help="file path or http(s):// URL "
                    "(compress: source; ingest: destination)")
@@ -591,6 +713,10 @@ def main(argv=None) -> int:
         if args.cmd == "inspect":
             ckpt = _checkpoint_dir(args.path)
             print(inspect_checkpoint(ckpt) if ckpt else inspect_file(args.path))
+            return 0
+
+        if args.cmd == "stats":
+            print(stats_file(args.path))
             return 0
 
         hdr = header_of(args.path)

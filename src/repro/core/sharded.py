@@ -41,6 +41,7 @@ from . import codec as chunked_codec
 from . import engine
 from . import io as raio
 from .io import RaWriter, is_url, join_path as _join
+from .stats import stats_supported
 from .spec import FLAG_CHUNKED, RawArrayError, env_int as _env_int
 
 INDEX_NAME = "index.json"
@@ -123,14 +124,21 @@ def write_sharded(
     chunked: bool = False,
     codec: Optional[str] = None,
     chunk_bytes: Optional[int] = None,
+    stats: Optional[bool] = None,
 ) -> ShardIndex:
     """Split ``arr`` along ``axis`` into ``nshards`` RawArray files.
 
     ``chunked=True`` (or ``codec=``/``chunk_bytes=``) writes every shard
     chunk-compressed (DESIGN.md §10); ``read_slice`` then decodes only the
-    chunks overlapping the requested rows."""
+    chunks overlapping the requested rows.
+
+    ``stats`` controls the per-chunk ``rastats`` block (DESIGN.md §16);
+    the default ``None`` auto-enables it for bool/int/float dtypes so
+    predicate pushdown works out of the box."""
     if is_url(dirpath):
         raise RawArrayError(f"write_sharded is local-only; got URL {dirpath}")
+    if stats is None:
+        stats = stats_supported(np.asarray(arr).dtype)
     if axis != 0:
         arr = np.moveaxis(arr, axis, 0)
     n = arr.shape[0]
@@ -146,6 +154,7 @@ def write_sharded(
             chunked=chunked,
             codec=codec,
             chunk_bytes=chunk_bytes,
+            stats=stats,
         )
 
     if workers > 1 and nshards > 1:
@@ -182,7 +191,10 @@ class ShardedWriter:
     valid shards plus one invisible temp. The ``index.json`` is written LAST
     (also temp + rename): the store does not exist as a store until finalize
     succeeds. The result is readable by ``read_slice`` / ``read_sharded``
-    and byte-identical, shard by shard, to ``io.write`` of each row slab.
+    and byte-identical, shard by shard, to ``io.write`` of each row slab
+    with matching options (``stats`` defaults ON for numeric dtypes here,
+    DESIGN.md §16, so pass ``stats=True`` to the monolithic write when
+    byte-comparing).
     """
 
     def __init__(
@@ -197,11 +209,14 @@ class ShardedWriter:
         chunked: bool = False,
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
+        stats: Optional[bool] = None,
     ):
         if is_url(dirpath):
             raise RawArrayError(f"ShardedWriter is local-only; got URL {dirpath}")
         self.dirpath = dirpath
         self._dtype = np.dtype(dtype)
+        if stats is None:  # default-on for numeric dtypes (DESIGN.md §16)
+            stats = stats_supported(self._dtype)
         self._row_shape = tuple(int(d) for d in row_shape)
         row_nbytes = self._dtype.itemsize
         for d in self._row_shape:
@@ -211,7 +226,8 @@ class ShardedWriter:
         else:
             nbytes = default_shard_bytes() if shard_bytes is None else max(1, shard_bytes)
             self._shard_rows = max(1, nbytes // row_nbytes) if row_nbytes else 1 << 30
-        self._wkw = dict(crc32=crc32, chunked=chunked, codec=codec, chunk_bytes=chunk_bytes)
+        self._wkw = dict(crc32=crc32, chunked=chunked, codec=codec,
+                         chunk_bytes=chunk_bytes, stats=stats)
         self._offsets: List[int] = [0]
         self._files: List[str] = []
         self._writer: Optional[RaWriter] = None

@@ -94,6 +94,7 @@ class DatasetBuilder:
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
         quantize: Optional[Dict[str, Any]] = None,
+        stats: Optional[bool] = None,
     ):
         self.root = root
         self.fields = fields  # name -> (row_shape, dtype)
@@ -102,6 +103,7 @@ class DatasetBuilder:
         self.codec = codec
         self.chunk_bytes = chunk_bytes
         self.crc32 = crc32
+        self.stats = stats  # None = auto: on for numeric stored dtypes (§16)
         self.quant: Dict[str, ra.QuantInfo] = {}
         for name, spec in (quantize or {}).items():
             if name not in fields:
@@ -144,6 +146,11 @@ class DatasetBuilder:
                     codec=self.codec, chunk_bytes=self.chunk_bytes,
                     metadata=(self.quant[name].encode()
                               if name in self.quant else None),
+                    # per-chunk stats default on for numeric stored dtypes
+                    # (uint8 codes for quantized fields), DESIGN.md §16
+                    stats=(ra.stats_supported(
+                        np.uint8 if name in self.quant else np.dtype(dtype))
+                        if self.stats is None else self.stats),
                 )
                 for name, (shape, dtype) in self.fields.items()
             }
@@ -297,6 +304,9 @@ class RaDataset:
         # table or None) for positioned reads; src is an int fd locally, a
         # pooled RemoteReader for URLs
         self._fds: Dict[Tuple[int, str], Tuple[Any, int, int, Any, Any]] = {}
+        # (shard, field) -> ChunkStats | None, decoded once from the tail
+        # of each shard file (header/table/tail reads only — never payload)
+        self._stats: Dict[Tuple[int, str], Any] = {}
         # shard -> access count, bumped on EVERY fd/mmap lookup: the witness
         # that a mesh host never touches a shard it doesn't own (§15)
         self._shard_touch: Dict[int, int] = {}
@@ -658,6 +668,95 @@ class RaDataset:
                 sample[mask] = self._mmap(int(si), f)[local]
             out[f] = sample
         return out
+
+    # ---- predicate pushdown (DESIGN.md §16) -------------------------------
+    def field_stats(self, shard_idx: int, field: str):
+        """Per-chunk ``rastats`` statistics of one shard file, decoded once
+        and cached. Costs the header + chunk table + two small tail reads
+        (a few hundred bytes over HTTP) — the payload is never touched.
+        ``None`` for shards written without (or with a damaged) stats
+        block; those shards are then fully scanned."""
+        key = (shard_idx, field)
+        if key not in self._stats:
+            src, _doff, _rnb, hdr, table = self._fmeta(shard_idx, field)
+            size = chunked_codec._src_size(src)
+            self._stats[key] = ra.io._read_stats_src(
+                src, hdr, size=size,
+                table_nbytes=table.nbytes if table is not None else 0,
+            )
+        return self._stats[key]
+
+    def _row_verdicts(self, where) -> Tuple[np.ndarray, np.ndarray]:
+        """Global per-row ``(definitely_true, definitely_false)`` for a
+        predicate, from the per-shard stats blocks."""
+        pfields = sorted(where.fields())
+        for f in pfields:
+            if f not in self.fields:
+                raise ra.RawArrayError(f"predicate names unknown field {f!r}")
+        dt = np.zeros(self.total_rows, dtype=bool)
+        df = np.zeros(self.total_rows, dtype=bool)
+        self._resolve_fmeta(range(len(self.shards)), pfields)
+        for si, sh in enumerate(self.shards):
+            info = {}
+            for f in pfields:
+                rshape, dtype = self.stored_spec(f)
+                rnb = dtype.itemsize
+                for d in rshape:
+                    rnb *= d
+                info[f] = (self.field_stats(si, f), rnb)
+            d, e = where.row_verdicts(sh.rows, info)
+            dt[sh.row_offset:sh.row_offset + sh.rows] = d
+            df[sh.row_offset:sh.row_offset + sh.rows] = e
+        return dt, df
+
+    def select(
+        self,
+        where=None,
+        fields: Optional[Sequence[str]] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Read every row matching ``where`` (DESIGN.md §16).
+
+        The predicate (built with ``repro.core.col``) is pushed down to
+        the per-chunk statistics: chunks whose ``[min, max]`` intervals
+        prove no row can match are pruned without fetching a single
+        payload byte, chunks proved all-matching are taken wholesale, and
+        only the undecided rows are decoded AND masked — each touched
+        chunk is decoded exactly once, with the residual row filter
+        applied in the same pass. Identical for local directories,
+        ``http(s)://`` URLs and the fleet router. Rows of quantized
+        fields are compared (and returned) as their STORED uint8 codes.
+        Shards without usable stats degrade to a full scan — results are
+        always byte-identical to filtering a full read."""
+        fields = list(fields or self.fields)
+        if where is None:
+            return self.rows(0, self.total_rows, fields)
+        pfields = sorted(where.fields())
+        dt, df = self._row_verdicts(where)
+        cand = np.nonzero(~df)[0]
+        if cand.size == 0:
+            return {f: self._dest(None, f, 0) for f in fields}
+        need_scan = bool((~dt[cand]).any())
+        gfields = list(dict.fromkeys(fields + (pfields if need_scan else [])))
+        batch = self.gather(cand, gfields)
+        if not need_scan:
+            return {f: batch[f] for f in fields}
+        keep = dt[cand] | where.mask({f: batch[f] for f in pfields})
+        return {f: batch[f][keep] for f in fields}
+
+    def select_indices(self, where) -> np.ndarray:
+        """Global row indices matching ``where`` (sorted ascending) — the
+        planning half of ``select``, used by ``DataLoader(where=...)``.
+        Only predicate fields of undecided chunks are decoded."""
+        dt, df = self._row_verdicts(where)
+        cand = np.nonzero(~df)[0]
+        scan = cand[~dt[cand]]
+        if scan.size == 0:
+            return cand
+        pfields = sorted(where.fields())
+        batch = self.gather(scan, pfields)
+        keep = dt[cand].copy()
+        keep[~dt[cand]] = where.mask(batch)
+        return cand[keep]
 
     def host_range(self, host_id: int, host_count: int) -> Tuple[int, int]:
         """Contiguous row range owned by this host (multi-host sharding)."""

@@ -28,6 +28,11 @@
   block cache sized to the working set, epoch 2+ is served from RAM.
   ``stats()`` then also reports the cache hit/miss/eviction counters.
   The ``naive=True`` baseline indexes local mmaps and is refused remotely.
+* **Predicate filtering** (``where=col("label") == 3``, DESIGN.md §16):
+  the loader trains on only the matching rows. The match set is planned
+  once with chunk-statistics pushdown (pruned chunks never fetch payload
+  bytes), then shuffled/split per epoch exactly like the full dataset.
+  Mutually exclusive with ``mesh=`` and ``naive=``.
 * **Quantized fields** (DESIGN.md §12): fields stored as uint8 codes are
   dequantized on host by default (``dequant=True``) so consumers see the
   logical float batches; ``DeviceLoader`` wraps a ``dequant=False`` loader
@@ -94,9 +99,18 @@ class DataLoader:
         naive: bool = False,
         dequant: bool = True,
         mesh: Optional[Any] = None,
+        where: Optional[Any] = None,
     ):
         if not drop_last:
             raise NotImplementedError("fixed-shape training wants drop_last")
+        if where is not None and mesh is not None:
+            raise ValueError(
+                "where= filters rows with predicate pushdown; the mesh "
+                "partitions by shard ownership — combine them by filtering "
+                "at ingest instead"
+            )
+        if where is not None and naive:
+            raise ValueError("naive=True is the seed baseline; it has no where mode")
         if naive and getattr(dataset, "is_remote", False):
             raise ValueError(
                 "naive=True gathers via local mmaps and cannot stream a "
@@ -119,6 +133,11 @@ class DataLoader:
         self._qcap = max(1, prefetch)
         self.reuse_buffers = reuse_buffers and not naive
         self.naive = naive  # seed-era produce path (benchmark baseline)
+        # predicate-filtered loading (DESIGN.md §16): the matching global
+        # row set is planned ONCE via chunk-stats pushdown; epochs then
+        # shuffle/split only the matching rows
+        self.where = where
+        self._where_rows: Optional[np.ndarray] = None
         # host-side dequantization of quantized fields (DESIGN.md §12);
         # DeviceLoader turns this off and decodes on device instead
         self.dequant = dequant
@@ -137,7 +156,21 @@ class DataLoader:
         self._exc: Optional[BaseException] = None  # sticky producer error
 
     # ---- order ------------------------------------------------------------
+    def _matched_rows(self) -> np.ndarray:
+        """Global rows matching ``where`` (sorted), computed once per loader
+        via ``RaDataset.select_indices`` — chunk pruning means the plan
+        decodes only predicate columns of undecided chunks."""
+        if self._where_rows is None:
+            self._where_rows = self.ds.select_indices(self.where)
+        return self._where_rows
+
     def _host_rows(self) -> np.ndarray:
+        if self.where is not None:
+            rows = self._matched_rows()
+            per = len(rows) // self.host_count
+            start = self.host_id * per
+            stop = start + per if self.host_id < self.host_count - 1 else len(rows)
+            return rows[start:stop]
         start, stop = self.ds.host_range(self.host_id, self.host_count)
         return np.arange(start, stop)
 
@@ -193,13 +226,17 @@ class DataLoader:
             # mesh epochs re-deal ownership, so the minimum-owner step count
             # is genuinely per-epoch (and per segment history)
             return self._mesh_plan(epoch).steps()
+        if self.where is not None:
+            return (len(self._matched_rows()) // self.host_count) // self.batch_size
         return (self.ds.total_rows // self.host_count) // self.batch_size
 
     def _dropped_tail(self, epoch: int) -> int:
         """Rows the epoch never delivers GLOBALLY (identical on every host)."""
         if self.mesh is not None:
             return self._mesh_plan(epoch).dropped_rows()
-        return self.ds.total_rows - self._spe(epoch) * self.batch_size * self.host_count
+        total = (len(self._matched_rows()) if self.where is not None
+                 else self.ds.total_rows)
+        return total - self._spe(epoch) * self.batch_size * self.host_count
 
     # ---- synchronous iteration ---------------------------------------------
     def _make_ring(self) -> list:
@@ -247,7 +284,8 @@ class DataLoader:
             batch = self.ds.gather(idx, out=out)
         elif self.naive and self.shuffle:
             batch = self.ds.gather_naive(idx)
-        elif self.shuffle:
+        elif self.shuffle or self.where is not None:
+            # predicate-filtered rows are non-contiguous even unshuffled
             batch = self.ds.gather(idx, out=out)
         else:
             batch = self.ds.rows(int(idx[0]), int(idx[-1]) + 1, out=out)

@@ -36,6 +36,7 @@ from .client import (
     remote_read,
     remote_read_into,
     remote_read_metadata,
+    remote_read_stats,
     reset_breakers,
     stat_dir,
     upload_bytes,
@@ -60,6 +61,7 @@ __all__ = [
     "remote_read",
     "remote_read_into",
     "remote_read_metadata",
+    "remote_read_stats",
     "reset_breakers",
     "reset_shared_cache",
     "serve",

@@ -51,7 +51,8 @@ import numpy as np
 from ..core import codec as chunked_codec
 from ..core import engine
 from ..core.header import Header, decode_header
-from ..core.io import RaWriter as _io_RaWriter, is_url, read_chunked
+from ..core.io import RaWriter as _io_RaWriter, _read_stats_src, is_url, read_chunked
+from ..core.stats import split_stats as _split_stats
 from ..core.spec import (
     FLAG_CHUNKED,
     FLAG_CRC32_TRAILER,
@@ -910,11 +911,12 @@ class RemoteWriter(_io_RaWriter):
         codec: Optional[str] = None,
         chunk_bytes: Optional[int] = None,
         metadata: Optional[bytes] = None,
+        stats: bool = False,
     ):
         super().__init__(
             url, dtype, row_shape,
             crc32=crc32, chunked=chunked, codec=codec, chunk_bytes=chunk_bytes,
-            metadata=metadata,
+            metadata=metadata, stats=stats,
             sink=_UploadSink(url, token=token, timeout=timeout),
         )
 
@@ -1012,7 +1014,8 @@ def remote_read(
         arr = arr.astype(dtype.newbyteorder("<"))
     arr = arr.reshape(hdr.shape)
     if with_metadata:
-        return arr, meta
+        # user metadata follows the rastats block, if any (DESIGN.md §16)
+        return arr, _split_stats(meta)[1]
     return arr
 
 
@@ -1056,4 +1059,15 @@ def remote_read_metadata(url: str) -> bytes:
     tail = reader.read_range(start, max(0, reader.size - start))
     if hdr.flags & FLAG_CRC32_TRAILER:
         tail = tail[:-4]
-    return tail
+    return _split_stats(tail)[1]
+
+
+def remote_read_stats(url: str):
+    """Per-chunk ``rastats`` statistics of a remote file (DESIGN.md §16):
+    header fast path + (for chunked files) the table-head range + two
+    small tail ranges. The payload is never fetched, which is what makes
+    predicate pushdown selectivity-proportional over HTTP — including
+    through the fleet router, which proxies ranges unchanged."""
+    reader = get_reader(url)
+    hdr = remote_header_of(url, strict_flags=False)
+    return _read_stats_src(reader, hdr, size=reader.size)

@@ -206,7 +206,8 @@ def test_sharded_writer_rolls_and_reads_back(tmp_path, rng):
     assert np.array_equal(ra.read_slice(d, 150, 650), arr[150:650])
     # each shard byte-identical to a monolithic write of its slab
     slab = tmp_path / "slab.ra"
-    ra.write(str(slab), arr[200:400], chunked=True, chunk_bytes=2048)
+    # stats=True: ShardedWriter defaults stats ON for numeric dtypes (§16)
+    ra.write(str(slab), arr[200:400], chunked=True, chunk_bytes=2048, stats=True)
     assert slab.read_bytes() == (tmp_path / "st" / "shard_00001.ra").read_bytes()
 
 
@@ -255,7 +256,8 @@ def test_dataset_builder_streams_and_rolls(tmp_path, rng):
     assert np.array_equal(got["y"], y[140:160])
     # shard files byte-identical to the pre-streaming (monolithic) writer
     mono = tmp_path / "mono.ra"
-    ra.write(str(mono), x[150:300])
+    # stats=True: DatasetBuilder defaults stats ON for numeric dtypes (§16)
+    ra.write(str(mono), x[150:300], stats=True)
     assert mono.read_bytes() == (tmp_path / "ds" / "x_00001.ra").read_bytes()
 
 

@@ -1,0 +1,405 @@
+"""Predicate pushdown (DESIGN.md §16): property + fault-injection tests.
+
+The single invariant everything here checks: ``select(where)`` is
+byte-identical to decoding EVERYTHING and filtering with numpy — across
+random dtypes / shapes / chunk sizes / codecs / predicates, on all-pruned
+and none-pruned extremes, NaN-laden floats, rows straddling chunk
+boundaries, local directories and a loopback byte-range server. Stats
+that are missing, corrupt, truncated, or from an unknown version may cost
+the pruning, never the answer.
+"""
+
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as ra
+from repro.core import codec as chunked_codec
+from repro.core import col
+from repro.core.racat import main as racat
+from repro.core.stats import ChunkStats, split_stats
+from repro.data import DataLoader, DatasetBuilder, RaDataset
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def _build(root, t, x, *, chunk_bytes=512, shard_rows=64, chunked=True,
+           stats=None, codec=None):
+    b = DatasetBuilder(
+        str(root),
+        {"t": ((), str(t.dtype)), "x": (x.shape[1:], str(x.dtype))},
+        shard_rows=shard_rows, chunked=chunked, chunk_bytes=chunk_bytes,
+        codec=codec, stats=stats,
+    )
+    b.append(t=t, x=x)
+    b.finish()
+    return str(root)
+
+
+def _ref(where, data, fields):
+    """Full-scan numpy reference: decode everything, mask, slice."""
+    mask = where.mask(data)
+    return {f: data[f][mask] for f in fields}
+
+
+def _check(ds, where, data, fields=("t", "x")):
+    got = ds.select(where=where, fields=list(fields))
+    want = _ref(where, data, fields)
+    for f in fields:
+        assert got[f].dtype == want[f].dtype, f
+        assert got[f].shape == want[f].shape, f
+        assert got[f].tobytes() == want[f].tobytes(), f
+    idx = ds.select_indices(where)
+    assert np.array_equal(idx, np.nonzero(where.mask(data))[0])
+
+
+# ------------------------------------------------------------ property suite
+@settings(max_examples=12, deadline=None)
+@given(
+    dtype=st.sampled_from(["int16", "int32", "int64", "uint8", "float32", "float64"]),
+    nrows=st.integers(min_value=1, max_value=257),
+    width=st.integers(min_value=1, max_value=5),
+    chunk_bytes=st.sampled_from([96, 256, 1024]),
+    opi=st.integers(min_value=0, max_value=5),
+    thresh=st.integers(min_value=-2, max_value=9),
+    shard_rows=st.sampled_from([48, 300]),
+)
+def test_select_matches_numpy_filter(tmp_path, dtype, nrows, width,
+                                     chunk_bytes, opi, thresh, shard_rows):
+    rng = np.random.default_rng(nrows * 1000 + chunk_bytes + opi)
+    dt = np.dtype(dtype)
+    t = rng.integers(0, 8, size=nrows).astype(dt)
+    x = rng.integers(0, 8, size=(nrows, width)).astype(dt)
+    if dt.kind == "f":  # sprinkle NaNs into both the key and the payload
+        t[rng.random(nrows) < 0.2] = np.nan
+        x[rng.random((nrows, width)) < 0.2] = np.nan
+    root = _build(tmp_path / "ds", t, x, chunk_bytes=chunk_bytes,
+                  shard_rows=shard_rows)
+    ds = RaDataset(root)
+    data = ds.rows(0, nrows)
+    c = col("t")
+    ops = [c == thresh, c != thresh, c < thresh, c <= thresh,
+           c > thresh, c >= thresh]
+    _check(ds, ops[opi], data)
+    # vector-field predicate: row-true iff ALL elements satisfy it
+    _check(ds, col("x") >= thresh, data)
+    # compound forms
+    _check(ds, (c >= 2) & (c < 6), data)
+    _check(ds, (c == 0) | ~(col("x") < 7), data)
+
+
+def test_all_pruned_and_none_pruned(tmp_path, rng):
+    t = np.arange(300, dtype=np.int64)
+    x = rng.normal(size=(300, 4)).astype(np.float32)
+    ds = RaDataset(_build(tmp_path / "ds", t, x, chunk_bytes=256))
+    data = ds.rows(0, 300)
+
+    # all-pruned: zero payload reads, empty-but-typed result
+    chunked_codec.reset_stats()
+    got = ds.select(where=col("t") > 10_000, fields=["t", "x"])
+    assert got["t"].shape == (0,) and got["t"].dtype == np.int64
+    assert got["x"].shape == (0, 4) and got["x"].dtype == np.float32
+    assert chunked_codec.stats()["chunk_reads"] == 0
+
+    # none-pruned (take-all): full result, no predicate-field re-decode
+    _check(ds, col("t") >= 0, data)
+
+    # partial window: fewer payload bytes than the full scan
+    chunked_codec.reset_stats()
+    _check(ds, (col("t") >= 100) & (col("t") < 110), data)
+    part = chunked_codec.stats()["chunk_stored_bytes"]
+    chunked_codec.reset_stats()
+    ds.rows(0, 300)
+    full = chunked_codec.stats()["chunk_stored_bytes"]
+    assert 0 < part < full
+
+
+def test_nan_semantics(tmp_path):
+    t = np.array([1.0, np.nan, 3.0, np.nan, 5.0], dtype=np.float64)
+    x = np.arange(10, dtype=np.float32).reshape(5, 2)
+    ds = RaDataset(_build(tmp_path / "ds", t, x, chunk_bytes=64))
+    data = ds.rows(0, 5)
+    for where in [col("t") == 3.0, col("t") != 3.0, col("t") < 4.0,
+                  col("t") >= 1.0, col("t").isnan(), ~col("t").isnan()]:
+        _check(ds, where, data)
+    # NaN fails everything except != (IEEE-754)
+    assert list(ds.select_indices(col("t") != 3.0)) == [0, 1, 3, 4]
+    assert list(ds.select_indices(col("t") < 4.0)) == [0, 2]
+    assert list(ds.select_indices(col("t").isnan())) == [1, 3]
+
+
+def test_chunk_boundary_straddling_rows(tmp_path, rng):
+    # 12-byte rows vs 64-byte chunks: every ~5th row straddles a boundary
+    t = np.repeat(np.arange(40, dtype=np.int32), 3).reshape(40, 3)
+    b = DatasetBuilder(str(tmp_path / "ds"), {"t": ((3,), "int32")},
+                       shard_rows=1000, chunked=True, chunk_bytes=64)
+    b.append(t=t)
+    b.finish()
+    ds = RaDataset(str(tmp_path / "ds"))
+    data = ds.rows(0, 40)
+    for k in (0, 5, 21, 39):
+        _check(ds, col("t") == k, data, fields=("t",))
+        _check(ds, (col("t") >= k) & (col("t") < k + 3), data, fields=("t",))
+
+
+def test_select_over_loopback_server(tmp_path, rng):
+    from repro import remote
+
+    t = np.arange(500, dtype=np.int64)
+    x = rng.normal(size=(500, 8)).astype(np.float32)
+    _build(tmp_path / "ds", t, x, chunk_bytes=1024, shard_rows=128)
+    server = remote.serve(str(tmp_path), port=0)
+    try:
+        ds = RaDataset(f"{server.url}/ds")
+        local = RaDataset(str(tmp_path / "ds"))
+        data = local.rows(0, 500)
+        where = (col("t") >= 100) & (col("t") < 140)
+        got = ds.select(where=where, fields=["t", "x"])
+        want = local.select(where=where, fields=["t", "x"])
+        for f in ("t", "x"):
+            assert got[f].tobytes() == want[f].tobytes()
+        assert np.array_equal(ds.select_indices(where),
+                              local.select_indices(where))
+        # stats resolve via ranged tail reads — remote matches local blocks
+        for si in range(len(ds.shards)):
+            r, l = ds.field_stats(si, "t"), local.field_stats(si, "t")
+            assert r is not None and r.encode() == l.encode()
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_dataloader_where(tmp_path, rng):
+    t = np.arange(400, dtype=np.int64)
+    x = rng.normal(size=(400, 4)).astype(np.float32)
+    ds = RaDataset(_build(tmp_path / "ds", t, x, chunk_bytes=512))
+    where = (col("t") >= 50) & (col("t") < 114)
+    dl = DataLoader(ds, batch_size=16, where=where, shuffle=False)
+    try:
+        assert dl.steps_per_epoch() == 4  # 64 matching rows / 16
+        seen = []
+        for _ in range(dl.steps_per_epoch()):
+            batch = next(dl)
+            assert batch["t"].shape[0] == 16
+            seen.append(batch["t"].copy())
+    finally:
+        dl.stop()
+    got = np.concatenate(seen)
+    assert np.array_equal(got, np.arange(50, 114))
+    # shuffled epochs permute exactly the matching row set
+    dl = DataLoader(ds, batch_size=16, where=where, shuffle=True, seed=7)
+    try:
+        seen = [next(dl)["t"].copy() for _ in range(dl.steps_per_epoch())]
+    finally:
+        dl.stop()
+    assert sorted(np.concatenate(seen).tolist()) == list(range(50, 114))
+    with pytest.raises(ValueError):
+        DataLoader(ds, batch_size=16, where=where, naive=True)
+
+
+# ------------------------------------------------------- fault injection
+def _smash_stats(path, mutate):
+    """Apply ``mutate(blob, i)`` at the rastats magic offset and rewrite."""
+    blob = bytearray(open(path, "rb").read())
+    i = blob.find(b"rastats_")
+    assert i >= 0, "fixture should carry a stats block"
+    mutate(blob, i)
+    open(path, "wb").write(bytes(blob))
+
+
+def _shard_path(root, field="t"):
+    ds = RaDataset(str(root))
+    return os.path.join(str(root), ds.shards[0].files[field])
+
+
+def test_corrupt_stats_degrade_to_full_scan(tmp_path, rng):
+    t = np.arange(200, dtype=np.int64)
+    x = rng.normal(size=(200, 2)).astype(np.float32)
+    root = _build(tmp_path / "ds", t, x, chunk_bytes=256, shard_rows=1000)
+
+    def smash(blob, i):  # impossible geometry: block_bytes <- 0xff..
+        blob[i + 16:i + 24] = b"\xff" * 8
+
+    _smash_stats(_shard_path(root), smash)
+    ds = RaDataset(root)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = ds.select(where=(col("t") >= 20) & (col("t") < 30), fields=["t"])
+    assert np.array_equal(got["t"], np.arange(20, 30))
+    assert any("rastats" in str(w.message) for w in rec)
+
+
+def test_unknown_version_stats_degrade_to_full_scan(tmp_path, rng):
+    t = np.arange(200, dtype=np.int64)
+    x = rng.normal(size=(200, 2)).astype(np.float32)
+    root = _build(tmp_path / "ds", t, x, chunk_bytes=256, shard_rows=1000)
+
+    def smash(blob, i):  # version <- 99: framing sound, rules unknown
+        blob[i + 8:i + 16] = (99).to_bytes(8, "little")
+
+    _smash_stats(_shard_path(root), smash)
+    ds = RaDataset(root)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = ds.select(where=col("t") == 7, fields=["t", "x"])
+    assert np.array_equal(got["t"], np.array([7]))
+    assert any("unknown version" in str(w.message) for w in rec)
+    # the user metadata behind the unknown-version block still decodes
+    # (quant JSON etc. live there), so readers are not locked out
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        assert ds.rows(0, 5)["t"].tolist() == [0, 1, 2, 3, 4]
+
+
+def test_stale_stats_caught_by_verify(tmp_path):
+    # same-geometry payload rewrite: select trusts the block (the file-level
+    # CRC / ETag is the rewrite tripwire), racat verify recomputes and fails
+    p = tmp_path / "x.ra"
+    ra.write(str(p), np.arange(100, dtype=np.int32), stats=True, crc32=True)
+    hdr = ra.header_of(str(p))
+    with open(p, "r+b") as f:
+        f.seek(hdr.nbytes)
+        f.write((77777).to_bytes(4, "little"))
+    rc = racat(["verify", str(p)])
+    assert rc == 1  # CRC mismatch AND stats mismatch both fire
+
+
+def test_truncated_stats_block(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(str(p), np.arange(64, dtype=np.float32), stats=True)
+    blob = open(p, "rb").read()
+    i = blob.find(b"rastats_")
+    # keep the head, drop the per-window arrays
+    open(p, "wb").write(blob[:i + 40])
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        st_ = ra.read_stats(str(p))
+    assert st_ is None
+    assert any("rastats" in str(w.message) for w in rec)
+
+
+# ---------------------------------------------------------------- backfill
+def test_pre_stats_files_full_scan_and_verify_green(tmp_path, rng):
+    # files written with stats off (== every pre-PR-9 file byte-for-byte)
+    t = np.arange(150, dtype=np.int64)
+    x = rng.normal(size=(150, 3)).astype(np.float32)
+    root = _build(tmp_path / "ds", t, x, stats=False, chunk_bytes=256)
+    ds = RaDataset(root)
+    assert ds.field_stats(0, "t") is None
+    data = ds.rows(0, 150)
+    _check(ds, (col("t") >= 10) & (col("t") < 30), data)
+    for sh in ds.shards:
+        for f in sh.files.values():
+            assert racat(["verify", os.path.join(root, f)]) == 0
+    # and old-style plain/chunked/crc files verify green too
+    for i, kw in enumerate([dict(), dict(crc32=True),
+                            dict(chunked=True, chunk_bytes=128, crc32=True)]):
+        p = tmp_path / f"old{i}.ra"
+        ra.write(str(p), x, **kw)
+        assert racat(["verify", str(p)]) == 0
+        assert ra.read_stats(str(p)) is None
+
+
+def test_metadata_roundtrip_with_stats(tmp_path):
+    # user metadata survives the prepended stats block on every read path
+    p = tmp_path / "m.ra"
+    meta = b'{"captured": "live"}'
+    ra.write(str(p), np.arange(32, dtype=np.int16), stats=True,
+             metadata=meta, chunked=True, chunk_bytes=32, crc32=True)
+    arr, back = ra.read(str(p), with_metadata=True)
+    assert back == meta and np.array_equal(arr, np.arange(32, dtype=np.int16))
+    assert ra.read_metadata(str(p)) == meta
+    st_ = ra.read_stats(str(p))
+    assert st_ is not None and st_.nchunks == 2
+
+
+# ------------------------------------------------------------------ racat CLI
+def _run_racat(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.racat", *args],
+        capture_output=True, text=True, env=env)
+
+
+def test_racat_stats_cli(tmp_path):
+    p = tmp_path / "x.ra"
+    arr = np.arange(1000, dtype=np.float32)
+    arr[3] = np.nan
+    ra.write(str(p), arr, stats=True, chunked=True, chunk_bytes=1024)
+    r = _run_racat("stats", str(p))
+    assert r.returncode == 0
+    assert "nchunks      4" in r.stdout and "chunk_bytes  1024" in r.stdout
+    # window 0 carries the NaN
+    line0 = [l for l in r.stdout.splitlines() if l.strip().startswith("0 ")][0]
+    assert " 1 " in " ".join(line0.split())
+    # no-stats file: exit 1, explanatory message
+    q = tmp_path / "old.ra"
+    ra.write(str(q), arr)
+    r = _run_racat("stats", str(q))
+    assert r.returncode == 1 and "no rastats" in r.stderr
+    # inspect shows the stats line
+    r = _run_racat("inspect", str(p))
+    assert r.returncode == 0 and "stats        4 windows" in r.stdout
+    r = _run_racat("inspect", str(q))
+    assert r.returncode == 0 and "stats        none" in r.stdout
+
+
+def test_racat_verify_stats_mismatch_cli(tmp_path):
+    p = tmp_path / "x.ra"
+    ra.write(str(p), np.arange(100, dtype=np.int32), stats=True)
+    assert racat(["verify", str(p)]) == 0
+    hdr = ra.header_of(str(p))
+    with open(p, "r+b") as f:
+        f.seek(hdr.nbytes)
+        f.write((424242).to_bytes(4, "little"))
+    r = _run_racat("verify", str(p))
+    assert r.returncode == 1 and "rastats" in r.stderr and "stale" in r.stderr
+
+
+# --------------------------------------------------------------- unit corners
+def test_expr_bool_raises():
+    with pytest.raises(TypeError):
+        bool(col("t") == 1)
+    with pytest.raises(TypeError):
+        (col("t") == 1) and (col("t") == 2)
+
+
+def test_unknown_field_raises(tmp_path, rng):
+    t = np.arange(10, dtype=np.int64)
+    x = rng.normal(size=(10, 2)).astype(np.float32)
+    ds = RaDataset(_build(tmp_path / "ds", t, x))
+    with pytest.raises(ra.RawArrayError):
+        ds.select(where=col("nope") == 1)
+
+
+def test_split_stats_passthrough():
+    # no magic: plain user metadata passes through untouched
+    st_, rest = split_stats(b'{"k": 1}')
+    assert st_ is None and rest == b'{"k": 1}'
+    st_, rest = split_stats(b"")
+    assert st_ is None and rest == b""
+
+
+def test_stats_roundtrip_and_exactness():
+    big = (1 << 53) + 1  # not f64-representable: bounds must round outward
+    arr = np.array([0, big, 5], dtype=np.int64)
+    st_ = ra.compute_stats(arr, 1024)
+    blob = st_.encode()
+    back = ChunkStats.decode(blob)
+    assert back.encode() == blob
+    assert back.mins[0] <= 0 and back.maxs[0] >= big
+    # a pruning decision near the inexact value stays conservative
+    info = {"t": (back, 8)}
+    dt, df = (col("t") == big).row_verdicts(3, info)
+    assert not dt.any()  # inexact bound: never proved equal
+    assert not df.any()  # ...and never pruned away

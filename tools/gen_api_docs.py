@@ -30,6 +30,7 @@ MODULES = [
     ("repro.core.quant", "typed quantized-field metadata schema"),
     ("repro.core.engine", "parallel chunked I/O engine"),
     ("repro.core.codec", "chunked compression codec"),
+    ("repro.core.stats", "per-chunk statistics + predicate pushdown"),
     ("repro.core.sharded", "sharded stores (read + streaming write)"),
     ("repro.core.racat", "CLI introspection / verify / compress / ingest"),
     ("repro.remote.server", "HTTP byte-range + upload server"),
