@@ -118,10 +118,10 @@ class _Budget:
 
     def __init__(self, cap: int):
         self.cap = cap
-        self.used = 0
-        self.peak = 0
+        self.used = 0   # guarded-by: _cond
+        self.peak = 0   # guarded-by: _cond
         self._cond = threading.Condition()
-        self._aborted = False
+        self._aborted = False  # guarded-by: _cond
 
     def admit(self, cost: int) -> bool:
         """Block until ``cost`` fits (a single over-budget leaf is admitted
@@ -333,6 +333,8 @@ def _start_warmup(plans: List[_LeafPlan], interpret: Optional[bool]) -> Optional
         except Exception:
             pass  # warmup is best-effort; the real call surfaces errors
 
+    # ralint: allow=thread-lifecycle -- returned to restore_pipelined, which
+    # joins it in its finally block; best-effort warmup with a bounded body
     t = threading.Thread(target=run, daemon=True, name="ra-coldstart-warm")
     t.start()
     return t

@@ -43,7 +43,6 @@ touch only overlapping chunks (surfaced via ``RaDataset.io_stats()``).
 from __future__ import annotations
 
 import os
-import struct
 import threading
 import zlib
 from dataclasses import dataclass
@@ -51,13 +50,13 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from . import engine
-from .spec import RawArrayError, env_int as _env_int
+from . import engine, layouts
+from .spec import RawArrayError, env_int as _env_int, env_str as _env_str
 
-CHUNK_MAGIC: int = int.from_bytes(b"rachunks", "little")
-TABLE_HEAD = struct.Struct("<QQQQ")  # magic, codec_id, chunk_bytes, nchunks
-TABLE_HEAD_BYTES = TABLE_HEAD.size  # 32
-ENTRY_BYTES = 32  # 4 x u64 per chunk
+CHUNK_MAGIC: int = layouts.CHUNK_TABLE.magic_int
+TABLE_HEAD = layouts.CHUNK_TABLE.head_struct  # magic, codec_id, chunk_bytes, nchunks
+TABLE_HEAD_BYTES = layouts.CHUNK_TABLE.head_bytes  # 32
+ENTRY_BYTES = layouts.CHUNK_TABLE.entry_bytes  # 4 x u64 per chunk
 
 
 def default_chunk_bytes() -> int:
@@ -67,7 +66,7 @@ def default_chunk_bytes() -> int:
 
 def default_codec_name() -> str:
     """Default codec (knob ``RA_CODEC``)."""
-    return os.environ.get("RA_CODEC", "zlib") or "zlib"
+    return _env_str("RA_CODEC", "zlib")
 
 
 # ------------------------------------------------------------ codec registry
@@ -147,7 +146,9 @@ except ImportError:
 
 # ------------------------------------------------------------- read counters
 _stats_lock = threading.Lock()
-_stats = {"chunk_reads": 0, "chunk_stored_bytes": 0, "chunk_raw_bytes": 0}
+# Audit note (ralint guarded-by): every _count/stats/reset_stats access was
+# already under _stats_lock when audited; the annotation locks that in.
+_stats = {"chunk_reads": 0, "chunk_stored_bytes": 0, "chunk_raw_bytes": 0}  # guarded-by: _stats_lock
 
 
 def _count(stored: int, raw: int) -> None:

@@ -47,7 +47,7 @@ from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .spec import RawArrayError, env_int as _env_int
+from .spec import RawArrayError, env_int as _env_int, env_str as _env_str
 
 # Indirection points so tests can inject short reads/writes.
 _preadv = os.preadv
@@ -77,12 +77,12 @@ def gather_min_run() -> int:
 
 
 def sequential_forced() -> bool:
-    return os.environ.get("RA_IO_SEQUENTIAL", "") == "1"
+    return _env_str("RA_IO_SEQUENTIAL") == "1"
 
 
 # --------------------------------------------------------------------- pool
-_pool: Optional[ThreadPoolExecutor] = None
-_pool_width = 0
+_pool: Optional[ThreadPoolExecutor] = None  # guarded-by: _pool_lock
+_pool_width = 0  # guarded-by: _pool_lock
 _pool_lock = threading.Lock()
 
 
@@ -101,8 +101,11 @@ def get_pool() -> ThreadPoolExecutor:
 
 def _reset_pool_after_fork() -> None:  # the child must not reuse parent threads
     global _pool, _pool_width
-    _pool = None
-    _pool_width = 0
+    # At-fork child handler: exactly one thread exists in the child, and
+    # taking the lock here could deadlock on a parent thread's hold
+    # snapshotted by fork.
+    _pool = None     # ralint: allow=guarded-by -- single-threaded at-fork child
+    _pool_width = 0  # ralint: allow=guarded-by -- single-threaded at-fork child
 
 
 if hasattr(os, "register_at_fork"):
@@ -328,7 +331,7 @@ def parallel_write(
 # cost: a recycled buffer is already page-faulted, and on this class of
 # kernel fault handling is the single-threaded bottleneck (see DESIGN.md §8).
 _scratch_lock = threading.Lock()
-_scratch_bufs: List[np.ndarray] = []
+_scratch_bufs: List[np.ndarray] = []  # guarded-by: _scratch_lock
 _SCRATCH_KEEP = 16
 
 

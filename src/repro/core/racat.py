@@ -605,6 +605,10 @@ subcommands:
   compress   rewrite as chunk-compressed:  racat compress <src> <dst>
   ingest     stream-concatenate .npy/.ra sources into one file or URL:
              racat ingest <dst> <src...> [--codec C] [--crc32]
+  doctor     layout-geometry checks against the core/layouts.py registry:
+             racat doctor FILE|DIR [...] — header/chunk-table/rastats
+             framing, segment tiling, stale-stats detection; never decodes
+             the payload; exits 1 on any drift (DESIGN.md §17)
   owners     shard -> host ownership table for a dataset manifest (or
              sharded index.json) under the data mesh (DESIGN.md §15):
              racat owners <manifest> --hosts N [--epoch E] [--vnodes V]
@@ -632,7 +636,7 @@ def main(argv=None) -> int:
     p.add_argument(
         "cmd",
         choices=["header", "data", "meta", "od", "verify", "inspect",
-                 "stats", "compress", "ingest", "owners"],
+                 "stats", "compress", "ingest", "owners", "doctor"],
     )
     p.add_argument("path", help="file path or http(s):// URL "
                    "(compress: source; ingest: destination)")
@@ -658,11 +662,18 @@ def main(argv=None) -> int:
                    help="owners: virtual nodes per host on the ring "
                    "(default: RA_MESH_VNODES or 64)")
     args = p.parse_args(argv)
-    if args.rest and args.cmd not in ("compress", "ingest"):
+    if args.rest and args.cmd not in ("compress", "ingest", "doctor"):
         p.error(f"{args.cmd} takes exactly one path "
                 f"(unexpected extra arguments: {' '.join(args.rest)})")
 
     try:
+        if args.cmd == "doctor":
+            # deferred: devtools is a dev dependency of the data plane,
+            # not the other way around
+            from ..devtools import doctor as doctor_mod
+
+            return doctor_mod.main([args.path] + args.rest)
+
         if args.cmd == "verify":
             problems = verify_file(args.path)
             if problems:

@@ -19,7 +19,8 @@ header is introspectable with ``od -t u8`` (see ``repro.core.racat``).
 from __future__ import annotations
 
 import os
-import struct
+
+from . import layouts
 
 
 def env_int(name: str, default: int) -> int:
@@ -37,17 +38,31 @@ def env_float(name: str, default: float) -> float:
     except ValueError:
         return default
 
+
+def env_str(name: str, default: str = "") -> str:
+    """String env knob, read at call time; unset/empty falls back.
+
+    Every ``RA_*`` environment read in the tree goes through one of the
+    ``env_*`` helpers — ralint's env-knob rule rejects raw ``os.environ``
+    access elsewhere, and ``tools/check_docs.py`` cross-checks the knob
+    names against the README table.
+    """
+    v = os.environ.get(name, "")
+    return v if v else default
+
 # ASCII of "rawarray" read as a little-endian u64. The byte sequence on disk
 # is literally the string b"rawarray".
-MAGIC: int = int.from_bytes(b"rawarray", "little")
+MAGIC: int = layouts.HEADER.magic_int
 assert MAGIC == 0x7961727261776172
 
-MAGIC_BYTES: bytes = b"rawarray"
+MAGIC_BYTES: bytes = layouts.HEADER.magic
 
 # --- header geometry -------------------------------------------------------
-U64 = struct.Struct("<Q")
-FIXED_HEADER = struct.Struct("<QQQQQQ")  # magic, flags, eltype, elbyte, dlen, ndims
-FIXED_HEADER_BYTES = FIXED_HEADER.size  # 48
+# Derived from the single layout registry (core/layouts.py): the fixed head is
+# magic, flags, eltype, elbyte, dlen, ndims — six little-endian u64s.
+U64 = layouts.U64.head_struct
+FIXED_HEADER = layouts.HEADER.head_struct
+FIXED_HEADER_BYTES = layouts.HEADER.head_bytes  # 48
 assert FIXED_HEADER_BYTES == 48
 
 

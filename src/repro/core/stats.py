@@ -42,22 +42,22 @@ user-metadata region after the chunk table)::
 
 from __future__ import annotations
 
-import struct
 import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Set, Tuple
 
 import numpy as np
 
+from . import layouts
 from .spec import RawArrayError
 
-RASTATS_MAGIC: int = int.from_bytes(b"rastats_", "little")
-RASTATS_MAGIC_BYTES: bytes = b"rastats_"
+RASTATS_MAGIC: int = layouts.RASTATS.magic_int
+RASTATS_MAGIC_BYTES: bytes = layouts.RASTATS.magic
 STATS_VERSION = 1
 
-_HEAD = struct.Struct("<QQQQQ")  # magic, version, block_bytes, nchunks, chunk_bytes
-HEAD_BYTES = _HEAD.size  # 40
-ENTRY_BYTES = 32  # u64 count + u64 nan_count + f64 min + f64 max
+_HEAD = layouts.RASTATS.head_struct  # magic, version, block_bytes, nchunks, chunk_bytes
+HEAD_BYTES = layouts.RASTATS.head_bytes  # 40
+ENTRY_BYTES = layouts.RASTATS.entry_bytes  # u64 count + u64 nan_count + f64 min + f64 max
 
 
 def stats_supported(dtype) -> bool:

@@ -113,11 +113,15 @@ class DeviceLoader:
         self._interpret = interpret
         self._block_rows = block_rows
         self._quant_dev: Dict[str, Tuple[Any, Any, np.dtype]] = {}
-        self._h2d_s = 0.0
-        self._h2d_bytes = 0
-        self._h2d_n = 0
-        self._wait_s = 0.0
-        self._n_batches = 0
+        # Regression note (ralint guarded-by): the feeder thread writes the
+        # h2d_* counters while the consumer writes _wait_s/_n_batches and
+        # stats() reads both — previously with no lock anywhere.
+        self._stats_lock = threading.Lock()
+        self._h2d_s = 0.0      # guarded-by: _stats_lock
+        self._h2d_bytes = 0    # guarded-by: _stats_lock
+        self._h2d_n = 0        # guarded-by: _stats_lock
+        self._wait_s = 0.0     # guarded-by: _stats_lock
+        self._n_batches = 0    # guarded-by: _stats_lock
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -180,11 +184,11 @@ class DeviceLoader:
                         # the transfer must COMPLETE before the next host
                         # batch may recycle the staging ring buffer under it
                         jax.block_until_ready(list(moved.values()))
-                    self._h2d_s += time.perf_counter() - t0
-                    self._h2d_bytes += sum(
-                        int(v.nbytes) for v in batch.values()
-                    )
-                    self._h2d_n += 1
+                    nbytes = sum(int(v.nbytes) for v in batch.values())
+                    with self._stats_lock:
+                        self._h2d_s += time.perf_counter() - t0
+                        self._h2d_bytes += nbytes
+                        self._h2d_n += 1
                     if not self.global_arrays:
                         # on-device decode is part of the FEED pipeline:
                         # dispatch the fused dequant here so the consumer's
@@ -307,13 +311,15 @@ class DeviceLoader:
             self._start()
         t0 = time.perf_counter()
         item = self._q.get()
-        self._wait_s += time.perf_counter() - t0
+        with self._stats_lock:
+            self._wait_s += time.perf_counter() - t0
         if isinstance(item, Exception):
             self._exc = item
             raise item
         moved, state = item
         moved["_state"] = state
-        self._n_batches += 1
+        with self._stats_lock:
+            self._n_batches += 1
         return moved
 
     # ---- lifecycle ----------------------------------------------------------
@@ -389,11 +395,12 @@ class DeviceLoader:
         smaller for quantized fields), ``device_wait_s`` (consumer starved
         on the device queue: the straggler signal), ``device_batches``."""
         out = dict(self.loader.stats())
-        out.update(
-            h2d_s=self._h2d_s,
-            h2d_bytes=float(self._h2d_bytes),
-            h2d_batches=float(self._h2d_n),  # feeder runs ahead of consumer
-            device_wait_s=self._wait_s,
-            device_batches=float(self._n_batches),
-        )
+        with self._stats_lock:
+            out.update(
+                h2d_s=self._h2d_s,
+                h2d_bytes=float(self._h2d_bytes),
+                h2d_batches=float(self._h2d_n),  # feeder runs ahead of consumer
+                device_wait_s=self._wait_s,
+                device_batches=float(self._n_batches),
+            )
         return out

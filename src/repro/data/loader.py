@@ -142,12 +142,20 @@ class DataLoader:
         # DeviceLoader turns this off and decodes on device instead
         self.dequant = dequant
         self._ring: list = []  # preallocated batch dicts when reuse_buffers
-        self._plans: Dict[int, Any] = {}  # epoch -> EpochPlan (mesh only)
+        # Regression note (ralint guarded-by): the epoch-plan memos are
+        # written by the prefetch thread (epoch rollover) AND the consumer
+        # (steps_per_epoch / _invalidate_plans) — the dict clear+insert used
+        # to run with no lock at all. Same for the stats counters: producer
+        # writes _produce_s while the consumer writes _wait_s/_n_batches.
+        self._plans_lock = threading.Lock()
+        self._plans: Dict[int, Any] = {}  # guarded-by: _plans_lock
+        self._order_memo = None           # guarded-by: _plans_lock
         self._last_state: Optional[LoaderState] = None  # last DELIVERED batch
         self.state = LoaderState()
-        self._wait_s = 0.0
-        self._produce_s = 0.0
-        self._n_batches = 0
+        self._stats_lock = threading.Lock()
+        self._wait_s = 0.0    # guarded-by: _stats_lock
+        self._produce_s = 0.0  # guarded-by: _stats_lock
+        self._n_batches = 0   # guarded-by: _stats_lock
         self._thread: Optional[threading.Thread] = None
         self._q: Optional[queue.Queue] = None
         # fresh Event per prefetch thread (see _start_prefetch): stop() of a
@@ -178,8 +186,11 @@ class DataLoader:
         """The mesh's pure epoch schedule (DESIGN.md §15), memoized — plans
         are invalidated whenever the segment history can change (restore /
         repartition / seek)."""
-        plan = self._plans.get(epoch)
+        with self._plans_lock:
+            plan = self._plans.get(epoch)
         if plan is None:
+            # plan() is pure in (seed, epoch, ...): two threads racing here
+            # compute identical plans, so only the memo writes need the lock
             plan = self.mesh.plan(
                 [s.rows for s in self.ds.shards],
                 seed=self.seed,
@@ -187,9 +198,10 @@ class DataLoader:
                 batch_size=self.batch_size,
                 shuffle=self.shuffle,
             )
-            if len(self._plans) > 4:
-                self._plans.clear()
-            self._plans[epoch] = plan
+            with self._plans_lock:
+                if len(self._plans) > 4:
+                    self._plans.clear()
+                self._plans[epoch] = plan
         return plan
 
     def _epoch_order(self, epoch: int) -> np.ndarray:
@@ -207,10 +219,11 @@ class DataLoader:
         ``_produce`` — measurable at high batch rates). Returns the LOCAL
         tuple's order, so a concurrent caller on another epoch (a zombie
         producer racing its successor) can't swap the memo underneath us."""
-        cached = getattr(self, "_order_memo", None)
+        cached = self._order_memo
         if cached is None or cached[0] != epoch:
             cached = (epoch, self._epoch_order(epoch))
-            self._order_memo = cached
+            with self._plans_lock:
+                self._order_memo = cached
         return cached[1]
 
     def steps_per_epoch(self) -> int:
@@ -310,8 +323,9 @@ class DataLoader:
             self._start_prefetch()
         t0 = time.perf_counter()
         batch = self._q.get()
-        self._wait_s += time.perf_counter() - t0
-        self._n_batches += 1
+        with self._stats_lock:
+            self._wait_s += time.perf_counter() - t0
+            self._n_batches += 1
         if isinstance(batch, Exception):
             self._exc = batch
             raise batch
@@ -367,7 +381,8 @@ class DataLoader:
                         buf = ring[pos % len(ring)]
                         pos += 1
                     b = self._produce(epoch, step, buf)
-                    self._produce_s += time.perf_counter() - t0
+                    with self._stats_lock:
+                        self._produce_s += time.perf_counter() - t0
                 except Exception as e:  # surface in consumer (sticky there)
                     while not stop.is_set():
                         try:
@@ -437,8 +452,9 @@ class DataLoader:
         return self.state
 
     def _invalidate_plans(self) -> None:
-        self._plans.clear()
-        self._order_memo = None
+        with self._plans_lock:
+            self._plans.clear()
+            self._order_memo = None
         self._last_state = None
 
     def stop(self, join_timeout: float = 2.0) -> None:
@@ -466,10 +482,12 @@ class DataLoader:
         self._exc = None
 
     def stats(self) -> Dict[str, float]:
+        with self._stats_lock:
+            wait_s, produce_s, n = self._wait_s, self._produce_s, self._n_batches
         out = {
-            "loader_wait_s": self._wait_s,
-            "loader_produce_s": self._produce_s,
-            "batches": float(self._n_batches),
+            "loader_wait_s": wait_s,
+            "loader_produce_s": produce_s,
+            "batches": float(n),
             # host identity + the lockstep tail (global, identical on every
             # host) — inputs to data_mesh.aggregate_stats
             "host_id": float(

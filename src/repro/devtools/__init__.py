@@ -1,0 +1,34 @@
+"""Correctness tooling for the threaded data plane (DESIGN.md §17).
+
+Three tools, one invariant catalog:
+
+* ``repro.devtools.lint`` — *ralint*, an AST-based linter enforcing the
+  codebase-specific rules that PRs 5–9 kept re-learning by hand: lock
+  discipline via ``# guarded-by:`` annotations, thread lifecycle
+  (stop-Event + joined stop), no sleep-polling loops, struct format
+  literals matching ``core/layouts.py``, and env knobs routed through
+  ``spec.env_*`` + documented in the README.  CLI: ``python
+  tools/ralint.py src/``.
+* ``repro.devtools.tsan`` — a runtime concurrency sanitizer: drop-in
+  instrumented ``Lock``/``RLock``/``Condition`` recording a global
+  acquisition graph (lock-order inversions, long holds,
+  acquire-after-finalize) plus a guarded-field write tracer that flags
+  unguarded cross-thread mutation.  Activated under pytest with
+  ``--ra-sanitize``.
+* ``repro.devtools.doctor`` — checks real ``.ra`` files against the
+  layout registry (``racat doctor FILE|DIR``), nonzero exit on drift.
+
+Import is lazy so ``repro.core`` never pays for devtools.
+"""
+
+from __future__ import annotations
+
+__all__ = ["lint", "tsan", "doctor"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(name)

@@ -1,0 +1,670 @@
+"""ralint — AST linter for this repo's threading + format invariants (DESIGN.md §17).
+
+Five rules, each born from a bug class PRs 5–9 fixed by hand:
+
+``guarded-by``
+    A field whose initializing assignment carries a ``# guarded-by: <lock>``
+    comment may only be mutated inside a ``with <...>.<lock>:`` block (matched
+    by the *terminal* name, so ``with self._lock:``, ``with st.lock:`` and
+    ``with _stats_lock:`` all work).  ``__init__`` is exempt (single-threaded
+    construction), as are methods whose name ends in ``_locked`` (the caller
+    holds the lock — the suffix is the contract).  Works for instance
+    attributes and module-level globals.
+
+``thread-lifecycle``
+    Every ``threading.Thread(...)`` must belong to a class that can actually
+    retire it: some ``stop``/``shutdown``/``close``/``wait`` method joins a
+    thread, and the class either owns a stop ``threading.Event``, passes
+    ``daemon=False``, or delegates to a ``.shutdown()``.  PR 5's zombie
+    prefetch ring is the canonical violation.
+
+``sleep-loop``
+    No ``time.sleep`` inside a loop in ``src/`` — condition variables and
+    ``Event.wait(timeout)`` exist; polling loops burn latency budget.
+
+``struct-layout``
+    Any literal ``struct`` format string in the data plane must be one of the
+    formats registered in ``core/layouts.py`` — the single source of truth
+    for on-disk geometry.  ``formats/`` (foreign-format adapters) is exempt.
+
+``env-knob`` / ``env-doc``
+    ``RA_*`` environment variables are read only through ``spec.env_*`` (so
+    every knob has one parse + fallback path), and every knob read in the
+    scanned tree must appear in the README's knob table.
+
+Waivers: a ``# ralint: allow=<rule> -- <reason>`` comment on the flagged
+line or the line above suppresses that rule there; the reason is mandatory
+culture, not syntax.  Fixture-friendly: ``lint_source`` lints a string.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+from ..core import layouts
+
+RULES = (
+    "guarded-by",
+    "thread-lifecycle",
+    "sleep-loop",
+    "struct-layout",
+    "env-knob",
+    "env-doc",
+)
+
+GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+ALLOW_RE = re.compile(r"#\s*ralint:\s*allow=([a-z-]+)")
+KNOB_RE = re.compile(r"\bRA_[A-Z][A-Z0-9_]*\b")
+TABLE_ROW_RE = re.compile(r"^\|\s*`(RA_[A-Z0-9_]+)`", re.M)
+
+#: method names that mutate their receiver in place
+MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "update", "setdefault", "move_to_end", "add", "discard",
+    "appendleft", "popleft", "sort", "reverse",
+})
+
+#: method names that count as a "retire the thread" entry point
+STOPISH = frozenset({"stop", "shutdown", "close", "wait", "join", "stop_all"})
+
+#: struct.* entry points whose first argument is a format string
+STRUCT_FNS = frozenset({
+    "Struct", "pack", "unpack", "pack_into", "unpack_from", "calcsize",
+    "iter_unpack",
+})
+
+#: spec helpers that are the sanctioned way to read RA_* knobs
+ENV_HELPERS = frozenset({"env_int", "env_float", "env_str"})
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+# ---------------------------------------------------------------- helpers
+def _terminal_name(expr: ast.expr) -> Optional[str]:
+    """The last dotted component of an expression (``a.b._lock`` -> ``_lock``)."""
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def _base_name(expr: ast.expr) -> Optional[str]:
+    """The first dotted component (``self._blocks`` -> ``self``)."""
+    while isinstance(expr, ast.Attribute):
+        expr = expr.value
+    return expr.id if isinstance(expr, ast.Name) else None
+
+
+def _is_call_to(node: ast.expr, modname: str, attr: str) -> bool:
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == attr
+        and isinstance(node.value, ast.Name)
+        and node.value.id == modname
+    )
+
+
+class FileInfo:
+    """Parsed source + the comment-carried metadata the AST can't see."""
+
+    def __init__(self, path: str, src: str):
+        self.path = path
+        self.src = src
+        self.lines = src.splitlines()
+        self.tree = ast.parse(src, filename=path)
+        # line -> lock name from "# guarded-by: <lock>" comments
+        self.guard_lines: Dict[int, str] = {}
+        # line -> set of rules waived by "# ralint: allow=<rule>" comments
+        self.allow_lines: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = GUARDED_RE.search(text)
+            if m:
+                self.guard_lines[i] = m.group(1)
+            for rule in ALLOW_RE.findall(text):
+                self.allow_lines.setdefault(i, set()).add(rule)
+
+    def allowed(self, rule: str, line: int) -> bool:
+        """Waived when the flagged line, or the contiguous comment block
+        immediately above it, carries ``# ralint: allow=<rule>``."""
+        if rule in self.allow_lines.get(line, set()):
+            return True
+        ln = line - 1
+        while 1 <= ln <= len(self.lines) and self.lines[ln - 1].lstrip().startswith("#"):
+            if rule in self.allow_lines.get(ln, set()):
+                return True
+            ln -= 1
+        return False
+
+
+def _collect_guards(info: FileInfo) -> Tuple[
+    Dict[str, Dict[str, str]],  # class name -> {attr: lock}
+    Dict[str, str],             # module-level global -> lock
+]:
+    """Attach ``# guarded-by`` comments to the assignments on their lines."""
+    class_guards: Dict[str, Dict[str, str]] = {}
+    module_guards: Dict[str, str] = {}
+
+    for node in info.tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            lock = info.guard_lines.get(node.lineno)
+            if lock:
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        module_guards[t.id] = lock
+        elif isinstance(node, ast.ClassDef):
+            guards = class_guards.setdefault(node.name, {})
+            for sub in ast.walk(node):
+                if not isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    continue
+                lock = info.guard_lines.get(sub.lineno)
+                if not lock:
+                    continue
+                targets = (
+                    sub.targets if isinstance(sub, ast.Assign) else [sub.target]
+                )
+                for t in targets:
+                    if (
+                        isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                    ):
+                        guards[t.attr] = lock
+                    elif isinstance(t, ast.Name):
+                        # annotated slot-style class body assignment
+                        guards[t.id] = lock
+    class_guards = {k: v for k, v in class_guards.items() if v}
+    return class_guards, module_guards
+
+
+def collect_guards(path: str) -> Dict[str, Dict[str, str]]:
+    """Public: ``# guarded-by`` map of one file (used by the tsan tracer)."""
+    with open(path, "r", encoding="utf-8") as f:
+        info = FileInfo(path, f.read())
+    return _collect_guards(info)[0]
+
+
+# ---------------------------------------------------------------- the linter
+class _Linter:
+    def __init__(self, info: FileInfo, readme_knobs: Optional[Set[str]]):
+        self.info = info
+        self.readme_knobs = readme_knobs
+        self.out: List[Violation] = []
+        self.class_guards, self.module_guards = _collect_guards(info)
+        # attr name -> every lock any class in this module guards it with
+        self.attr_guards: Dict[str, Set[str]] = {}
+        for guards in self.class_guards.values():
+            for attr, lock in guards.items():
+                self.attr_guards.setdefault(attr, set()).add(lock)
+        self.knobs_read: Set[str] = set()
+        self.struct_exempt = (
+            os.sep + "formats" + os.sep in info.path or "/formats/" in info.path
+        )
+
+    def report(self, rule: str, line: int, msg: str) -> None:
+        if not self.info.allowed(rule, line):
+            self.out.append(Violation(rule, self.info.path, line, msg))
+
+    def run(self) -> List[Violation]:
+        for node in self.info.tree.body:
+            self._toplevel(node)
+        self._whole_file_rules()
+        return self.out
+
+    # ------------------------------------------------------------ dispatch
+    def _toplevel(self, node: ast.stmt) -> None:
+        if isinstance(node, ast.ClassDef):
+            self._check_class(node)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._check_function(node, cls=None)
+
+    def _check_class(self, cls: ast.ClassDef) -> None:
+        self._thread_rule_class(cls)
+        for node in cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_function(node, cls=cls.name)
+            elif isinstance(node, ast.ClassDef):
+                self._check_class(node)
+
+    def _check_function(self, fn, cls: Optional[str]) -> None:
+        exempt = (cls is not None and fn.name in ("__init__", "__new__")) or (
+            fn.name.endswith("_locked")
+        )
+        self._stmts(fn.body, frozenset(), cls, exempt)
+
+    def _stmts(
+        self,
+        stmts: Sequence[ast.stmt],
+        held: FrozenSet[str],
+        cls: Optional[str],
+        exempt: bool,
+    ) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested function: may run on another thread, lock context
+                # does not transfer, and the __init__ exemption ends here
+                self._check_function(st, cls)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                names = {
+                    n
+                    for item in st.items
+                    if (n := _terminal_name(item.context_expr)) is not None
+                }
+                self._stmts(st.body, held | names, cls, exempt)
+            elif isinstance(st, (ast.If, ast.For, ast.AsyncFor, ast.While)):
+                self._simple(st, held, cls, exempt, header_only=True)
+                self._stmts(st.body, held, cls, exempt)
+                self._stmts(st.orelse, held, cls, exempt)
+            elif isinstance(st, ast.Try):
+                self._stmts(st.body, held, cls, exempt)
+                for h in st.handlers:
+                    self._stmts(h.body, held, cls, exempt)
+                self._stmts(st.orelse, held, cls, exempt)
+                self._stmts(st.finalbody, held, cls, exempt)
+            elif isinstance(st, ast.Match):
+                for case in st.cases:
+                    self._stmts(case.body, held, cls, exempt)
+            elif isinstance(st, ast.ClassDef):
+                self._check_class(st)
+            else:
+                self._simple(st, held, cls, exempt)
+
+    # ------------------------------------------------- guarded-by mechanics
+    def _simple(self, st, held, cls, exempt, header_only: bool = False) -> None:
+        """Check one simple statement (or a compound statement's header)."""
+        if not header_only:
+            if isinstance(st, ast.Assign):
+                for t in st.targets:
+                    self._target(t, held, cls, exempt)
+            elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+                if not (isinstance(st, ast.AnnAssign) and st.value is None):
+                    self._target(st.target, held, cls, exempt)
+            elif isinstance(st, ast.Delete):
+                for t in st.targets:
+                    self._target(t, held, cls, exempt)
+        # in-place mutator calls anywhere in the statement (incl. headers,
+        # returns, and right-hand sides): self._blocks.pop(k), _free.append(x)
+        scan = [st.test] if header_only and hasattr(st, "test") else (
+            [st.iter] if header_only and hasattr(st, "iter") else ([] if header_only else [st])
+        )
+        for root in scan:
+            for node in ast.walk(root):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in MUTATORS
+                ):
+                    recv = node.func.value
+                    if isinstance(recv, ast.Attribute):
+                        self._attr_mutation(
+                            recv.value, recv.attr, node.lineno, held, cls, exempt
+                        )
+                    elif isinstance(recv, ast.Name):
+                        self._global_mutation(recv.id, node.lineno, held, exempt)
+
+    def _target(self, t: ast.expr, held, cls, exempt) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                self._target(el, held, cls, exempt)
+        elif isinstance(t, ast.Starred):
+            self._target(t.value, held, cls, exempt)
+        elif isinstance(t, ast.Attribute):
+            self._attr_mutation(t.value, t.attr, t.lineno, held, cls, exempt)
+        elif isinstance(t, ast.Name):
+            self._global_mutation(t.id, t.lineno, held, exempt)
+        elif isinstance(t, ast.Subscript):
+            base = t.value
+            if isinstance(base, ast.Attribute):
+                self._attr_mutation(base.value, base.attr, t.lineno, held, cls, exempt)
+            elif isinstance(base, ast.Name):
+                self._global_mutation(base.id, t.lineno, held, exempt)
+
+    def _attr_mutation(self, base, attr, line, held, cls, exempt) -> None:
+        if exempt:
+            return
+        base_name = _base_name(base)
+        if base_name in ("self", "cls") and cls is not None:
+            locks = (
+                {self.class_guards.get(cls, {}).get(attr)}
+                if attr in self.class_guards.get(cls, {})
+                else set()
+            )
+        else:
+            # foreign object: enforceable only when the attr name is
+            # annotated somewhere in this module (e.g. rep.down inside
+            # Router, st.size inside EdgeServer)
+            locks = self.attr_guards.get(attr, set())
+        locks.discard(None)
+        if not locks or locks & held:
+            return
+        lock_desc = " or ".join(sorted(locks))
+        self.report(
+            "guarded-by",
+            line,
+            f"write to guarded field {attr!r} outside `with ...{lock_desc}:` "
+            f"(held here: {sorted(held) or 'none'})",
+        )
+
+    def _global_mutation(self, name, line, held, exempt) -> None:
+        lock = self.module_guards.get(name)
+        if lock is None or lock in held or exempt:
+            return
+        self.report(
+            "guarded-by",
+            line,
+            f"write to guarded global {name!r} outside `with {lock}:` "
+            f"(held here: {sorted(held) or 'none'})",
+        )
+
+    # --------------------------------------------------- class thread rule
+    def _thread_rule_class(self, cls: ast.ClassDef) -> None:
+        sites = [
+            node
+            for node in ast.walk(cls)
+            if isinstance(node, ast.Call) and _is_call_to(node.func, "threading", "Thread")
+        ]
+        if not sites:
+            return
+        has_event = any(
+            isinstance(n, ast.Call) and _is_call_to(n.func, "threading", "Event")
+            for n in ast.walk(cls)
+        )
+        stop_joins = stop_shutdowns = False
+        for node in cls.body:
+            if (
+                isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name in STOPISH
+            ):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute):
+                        if sub.func.attr == "join":
+                            stop_joins = True
+                        if sub.func.attr == "shutdown":
+                            stop_shutdowns = True
+        for site in sites:
+            nondaemon = any(
+                kw.arg == "daemon"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is False
+                for kw in site.keywords
+            )
+            ok = stop_joins and (has_event or nondaemon or stop_shutdowns)
+            if not ok:
+                self.report(
+                    "thread-lifecycle",
+                    site.lineno,
+                    f"threading.Thread in class {cls.name!r} without a "
+                    "stop-Event + joining stop()/shutdown() "
+                    "(PR 5's zombie-ring lesson; waive with "
+                    "`# ralint: allow=thread-lifecycle -- <why>` if the "
+                    "lifetime is externally managed)",
+                )
+
+    # ------------------------------------------------- whole-file sweeps
+    def _whole_file_rules(self) -> None:
+        self._sleep_rule(self.info.tree, in_loop=False)
+        is_spec = self.info.path.endswith("spec.py")
+        for node in ast.walk(self.info.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            # ---- module-level bare Thread (classes handled above)
+            if _is_call_to(fn, "threading", "Thread"):
+                if not self._enclosing_class_has(node):
+                    self.report(
+                        "thread-lifecycle",
+                        node.lineno,
+                        "bare threading.Thread outside any class that joins it",
+                    )
+            # ---- struct format literals
+            if (
+                not self.struct_exempt
+                and isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "struct"
+                and fn.attr in STRUCT_FNS
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)
+            ):
+                fmt = node.args[0].value
+                if fmt not in layouts.REGISTERED_FORMATS:
+                    self.report(
+                        "struct-layout",
+                        node.lineno,
+                        f"struct format {fmt!r} is not registered in "
+                        "core/layouts.py — declare the layout there (or waive "
+                        "for genuinely local scratch formats)",
+                    )
+            # ---- env reads
+            knob = self._env_read_knob(node)
+            if knob:
+                self.knobs_read.add(knob)
+                if not is_spec and self._raw_environ(node):
+                    self.report(
+                        "env-knob",
+                        node.lineno,
+                        f"raw os.environ read of {knob!r} — route through "
+                        "spec.env_int/env_float/env_str",
+                    )
+        # subscript reads: os.environ[<knob literal>]
+        for node in ast.walk(self.info.tree):
+            if (
+                isinstance(node, ast.Subscript)
+                and _is_call_to(node.value, "os", "environ")
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)
+                and node.slice.value.startswith("RA_")
+            ):
+                self.knobs_read.add(node.slice.value)
+                if not is_spec:
+                    self.report(
+                        "env-knob",
+                        node.lineno,
+                        f"raw os.environ[{node.slice.value!r}] — route through "
+                        "spec.env_int/env_float/env_str",
+                    )
+
+    def _enclosing_class_has(self, call: ast.Call) -> bool:
+        for node in ast.walk(self.info.tree):
+            if isinstance(node, ast.ClassDef):
+                if (
+                    node.lineno <= call.lineno
+                    and call.lineno <= max(
+                        getattr(node, "end_lineno", node.lineno), node.lineno
+                    )
+                ):
+                    return True
+        return False
+
+    def _sleep_rule(self, node: ast.AST, in_loop: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                self._sleep_rule(child, in_loop=False)
+            elif isinstance(child, (ast.While, ast.For, ast.AsyncFor)):
+                self._sleep_rule(child, in_loop=True)
+            else:
+                if (
+                    in_loop
+                    and isinstance(child, ast.Call)
+                    and _is_call_to(child.func, "time", "sleep")
+                ):
+                    self.report(
+                        "sleep-loop",
+                        child.lineno,
+                        "time.sleep inside a loop — use Event.wait(timeout) / "
+                        "a Condition, or waive with a reason for paced "
+                        "simulation or bounded backoff",
+                    )
+                self._sleep_rule(child, in_loop)
+
+    @staticmethod
+    def _raw_environ(node: ast.Call) -> bool:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr in ("get", "__getitem__"):
+            return _is_call_to(fn.value, "os", "environ")
+        if _is_call_to(fn, "os", "getenv"):
+            return True
+        return False
+
+    def _env_read_knob(self, node: ast.Call) -> Optional[str]:
+        """RA_* knob name when ``node`` reads an env var (any mechanism)."""
+        fn = node.func
+        is_helper = (
+            isinstance(fn, ast.Name) and fn.id in ENV_HELPERS
+        ) or (
+            isinstance(fn, ast.Attribute) and fn.attr in ENV_HELPERS
+        ) or (
+            isinstance(fn, ast.Name) and fn.id.lstrip("_") in ENV_HELPERS
+        ) or (
+            isinstance(fn, ast.Attribute) and fn.attr.lstrip("_") in ENV_HELPERS
+        )
+        if is_helper or self._raw_environ(node):
+            if node.args and isinstance(node.args[0], ast.Constant):
+                v = node.args[0].value
+                if isinstance(v, str) and v.startswith("RA_"):
+                    return v
+        return None
+
+
+# ---------------------------------------------------------------- public API
+def lint_source(
+    src: str,
+    path: str = "<fixture>",
+    readme_knobs: Optional[Set[str]] = None,
+) -> List[Violation]:
+    """Lint one source string (unit-test / fixture entry point)."""
+    info = FileInfo(path, src)
+    linter = _Linter(info, readme_knobs)
+    violations = linter.run()
+    if readme_knobs is not None:
+        for knob in sorted(linter.knobs_read - readme_knobs):
+            violations.append(
+                Violation(
+                    "env-doc",
+                    path,
+                    1,
+                    f"env knob {knob!r} is read here but missing from the "
+                    "README knob table",
+                )
+            )
+    return violations
+
+
+def readme_knob_table(readme_path: str) -> Set[str]:
+    """RA_* names documented in the README's knob table."""
+    with open(readme_path, "r", encoding="utf-8") as f:
+        return set(TABLE_ROW_RE.findall(f.read()))
+
+
+def iter_py(root: str) -> Iterable[str]:
+    if os.path.isfile(root):
+        yield root
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in ("__pycache__", ".git")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_paths(
+    paths: Sequence[str], readme: Optional[str] = None
+) -> List[Violation]:
+    """Lint every .py under ``paths``; knob-table check when ``readme`` given."""
+    readme_knobs = readme_knob_table(readme) if readme else None
+    violations: List[Violation] = []
+    all_knobs: Dict[str, Tuple[str, int]] = {}
+    for root in paths:
+        for path in iter_py(root):
+            with open(path, "r", encoding="utf-8") as f:
+                src = f.read()
+            try:
+                info = FileInfo(path, src)
+            except SyntaxError as e:
+                violations.append(
+                    Violation("syntax", path, e.lineno or 1, f"does not parse: {e.msg}")
+                )
+                continue
+            linter = _Linter(info, readme_knobs)
+            violations.extend(linter.run())
+            for knob in linter.knobs_read:
+                all_knobs.setdefault(knob, (path, 1))
+    if readme_knobs is not None:
+        for knob, (path, line) in sorted(all_knobs.items()):
+            if knob not in readme_knobs:
+                violations.append(
+                    Violation(
+                        "env-doc",
+                        path,
+                        line,
+                        f"env knob {knob!r} is read in the tree but missing "
+                        "from the README knob table",
+                    )
+                )
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return violations
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="ralint",
+        description="codebase-invariant linter (lock discipline, thread "
+        "lifecycle, struct layouts, env knobs) — DESIGN.md §17",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument(
+        "--readme",
+        default=None,
+        help="README.md whose knob table documents every RA_* knob "
+        "(default: auto-discover next to the first path; --no-readme skips)",
+    )
+    ap.add_argument(
+        "--no-readme", action="store_true", help="skip the env-doc knob-table rule"
+    )
+    ap.add_argument("-q", "--quiet", action="store_true", help="exit code only")
+    ns = ap.parse_args(argv)
+
+    readme = None
+    if not ns.no_readme:
+        if ns.readme:
+            readme = ns.readme
+        else:
+            probe = os.path.abspath(ns.paths[0])
+            for _ in range(6):
+                cand = os.path.join(probe, "README.md")
+                if os.path.isfile(cand):
+                    readme = cand
+                    break
+                parent = os.path.dirname(probe)
+                if parent == probe:
+                    break
+                probe = parent
+    violations = lint_paths(ns.paths, readme=readme)
+    if not ns.quiet:
+        for v in violations:
+            print(v)
+        n = len(violations)
+        print(f"ralint: {n} violation{'s' if n != 1 else ''}"
+              + (f" in {len({v.path for v in violations})} file(s)" if n else ""))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

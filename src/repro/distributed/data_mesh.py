@@ -50,7 +50,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.spec import RawArrayError, env_int
+from ..core.spec import RawArrayError, env_int, env_str
 from ..fleet.router import HashRing
 
 # rng stream salts: shard-order vs within-shard permutations must never
@@ -313,8 +313,8 @@ class DataMesh:
 
     @classmethod
     def from_env(cls) -> Optional["DataMesh"]:
-        hosts = os.environ.get("RA_MESH_HOSTS", "")
-        host = os.environ.get("RA_MESH_HOST", "")
+        hosts = env_str("RA_MESH_HOSTS")
+        host = env_str("RA_MESH_HOST")
         names = [h.strip() for h in hosts.split(",") if h.strip()]
         if not names or not host:
             return None

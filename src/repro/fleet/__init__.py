@@ -107,6 +107,14 @@ class Fleet:
         if self.origin is not None:
             self.origin.shutdown()
             self.origin.server_close()
+        # Regression note (ralint thread-lifecycle): the serve_forever
+        # threads were fired and forgotten — after shutdown() a thread could
+        # still be inside serve_forever's poll interval while the spill dirs
+        # below were being deleted. server.shutdown() above blocks until the
+        # loop exits, so these joins are bounded.
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads.clear()
         for d in self._spill_dirs:
             shutil.rmtree(d, ignore_errors=True)
 

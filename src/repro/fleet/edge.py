@@ -75,11 +75,11 @@ class SpillCache:
                                if capacity_bytes is None else int(capacity_bytes))
         self._lock = threading.Lock()
         # (tag, block) -> size, in LRU order (oldest first)
-        self._index: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
-        self._bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self._index: "OrderedDict[Tuple[str, int], int]" = OrderedDict()  # guarded-by: _lock
+        self._bytes = 0     # guarded-by: _lock
+        self.hits = 0       # guarded-by: _lock
+        self.misses = 0     # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
         os.makedirs(root, exist_ok=True)
 
     @staticmethod
@@ -175,9 +175,9 @@ class SingleFlight:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._flights: Dict[Tuple[str, int], _Flight] = {}
-        self.leaders = 0
-        self.coalesced_waits = 0
+        self._flights: Dict[Tuple[str, int], _Flight] = {}  # guarded-by: _lock
+        self.leaders = 0          # guarded-by: _lock
+        self.coalesced_waits = 0  # guarded-by: _lock
 
     def do(self, key: Tuple[str, int], fn):
         with self._lock:
@@ -214,11 +214,11 @@ class _PathState:
 
     def __init__(self):
         self.lock = threading.Lock()
-        self.reader: Optional[RemoteReader] = None
-        self.etag: Optional[str] = None
-        self.size = 0
-        self.tag = ""
-        self.checked_at = -1e9
+        self.reader: Optional[RemoteReader] = None  # guarded-by: lock
+        self.etag: Optional[str] = None             # guarded-by: lock
+        self.size = 0          # guarded-by: lock
+        self.tag = ""          # guarded-by: lock
+        self.checked_at = -1e9  # guarded-by: lock
 
 
 class _NotServable(Exception):
@@ -372,13 +372,13 @@ class EdgeServer(ThreadingHTTPServer):
                              if revalidate_s is None else float(revalidate_s))
         self.metrics = ServerMetrics()
         self.flights = SingleFlight()
-        self._paths: Dict[str, _PathState] = {}
+        self._paths: Dict[str, _PathState] = {}  # guarded-by: _paths_lock
         self._paths_lock = threading.Lock()
         self._stats_lock = threading.Lock()
-        self.origin_fetches = 0
-        self.origin_bytes = 0
-        self.invalidated_paths = 0
-        self._fetches_by_path: Dict[str, int] = {}
+        self.origin_fetches = 0      # guarded-by: _stats_lock
+        self.origin_bytes = 0        # guarded-by: _stats_lock
+        self.invalidated_paths = 0   # guarded-by: _stats_lock
+        self._fetches_by_path: Dict[str, int] = {}  # guarded-by: _stats_lock
         super().__init__(address, _EdgeHandler)
 
     @property

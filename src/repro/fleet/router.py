@@ -126,9 +126,9 @@ class _Replica:
 
     def __init__(self, url: str):
         self.url = url
-        self.down = False
-        self.requests = 0
-        self.errors = 0
+        self.down = False      # guarded-by: _lock
+        self.requests = 0      # guarded-by: _lock
+        self.errors = 0        # guarded-by: _lock
 
 
 def route_key(path: str, range_start: int, hash_block: int) -> str:
@@ -303,10 +303,10 @@ class Router(ThreadingHTTPServer):
         self.hash_block = default_hash_block() if hash_block is None else max(1, int(hash_block))
         self.metrics = ServerMetrics()
         self._lock = threading.Lock()
-        self._replicas: Dict[str, _Replica] = {}
-        self._ring = HashRing((), vnodes=self.vnodes)
-        self._failovers = 0
-        self._fallback_served = 0
+        self._replicas: Dict[str, _Replica] = {}   # guarded-by: _lock
+        self._ring = HashRing((), vnodes=self.vnodes)  # guarded-by: _lock
+        self._failovers = 0        # guarded-by: _lock
+        self._fallback_served = 0  # guarded-by: _lock
         self._stop = threading.Event()
         self._health_interval = (default_health_interval()
                                  if health_interval is None else health_interval)
@@ -432,8 +432,16 @@ class Router(ThreadingHTTPServer):
                 pass
 
     def shutdown(self) -> None:
+        # Regression note (ralint thread-lifecycle): shutdown() used to set
+        # _stop without joining, leaving the health prober alive mid-probe
+        # while the server object was torn down — the same zombie-thread
+        # shape PR 5 fixed in the loader ring. _stop.set() wakes the
+        # Event.wait immediately; the timeout only bounds an in-flight
+        # /healthz probe (itself capped at 1s).
         self._stop.set()
         super().shutdown()
+        if self._health_thread.is_alive():
+            self._health_thread.join(timeout=5.0)
 
 
 def main(argv: Optional[List[str]] = None) -> int:

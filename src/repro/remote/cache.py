@@ -61,12 +61,12 @@ class BlockCache:
             default_capacity_bytes() if capacity_bytes is None else int(capacity_bytes)
         )
         self._lock = threading.Lock()
-        self._blocks: "OrderedDict[Tuple[str, int], bytes]" = OrderedDict()
-        self._nbytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.invalidations = 0
+        self._blocks: "OrderedDict[Tuple[str, int], bytes]" = OrderedDict()  # guarded-by: _lock
+        self._nbytes = 0        # guarded-by: _lock
+        self.hits = 0           # guarded-by: _lock
+        self.misses = 0         # guarded-by: _lock
+        self.evictions = 0      # guarded-by: _lock
+        self.invalidations = 0  # guarded-by: _lock
 
     def __len__(self) -> int:
         return len(self._blocks)
@@ -143,7 +143,7 @@ class BlockCache:
             }
 
 
-_shared: Optional[BlockCache] = None
+_shared: Optional[BlockCache] = None  # guarded-by: _shared_lock
 _shared_lock = threading.Lock()
 
 

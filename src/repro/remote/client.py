@@ -60,6 +60,7 @@ from ..core.spec import (
     RawArrayError,
     env_float as _env_float,
     env_int as _env_int,
+    env_str as _env_str,
 )
 from .cache import BlockCache, shared_cache
 
@@ -107,9 +108,9 @@ class CircuitBreaker:
         self.window = _env_float("RA_REMOTE_BREAKER_WINDOW", 10.0) if window is None else float(window)
         self.cooldown = _env_float("RA_REMOTE_BREAKER_COOLDOWN", 1.0) if cooldown is None else float(cooldown)
         self._lock = threading.Lock()
-        self._count = 0
-        self._last = 0.0
-        self._open_until = 0.0
+        self._count = 0       # guarded-by: _lock
+        self._last = 0.0      # guarded-by: _lock
+        self._open_until = 0.0  # guarded-by: _lock
 
     def check(self, what: str = "") -> None:
         """Raise ``RawArrayError`` at once if the circuit is open; a no-op
@@ -180,10 +181,7 @@ def default_conns() -> int:
 
 def default_timeout() -> float:
     """Per-socket-operation timeout in seconds (knob ``RA_REMOTE_TIMEOUT``)."""
-    try:
-        return float(os.environ.get("RA_REMOTE_TIMEOUT", "30"))
-    except ValueError:
-        return 30.0
+    return _env_float("RA_REMOTE_TIMEOUT", 30.0)
 
 
 class _ConnPool:
@@ -199,8 +197,8 @@ class _ConnPool:
         self.limit = limit
         self._sem = threading.BoundedSemaphore(limit)
         self._lock = threading.Lock()
-        self._free: List[http.client.HTTPConnection] = []
-        self._closed = False
+        self._free: List[http.client.HTTPConnection] = []  # guarded-by: _lock
+        self._closed = False  # guarded-by: _lock
 
     def _new_conn(self) -> http.client.HTTPConnection:
         cls = (
@@ -705,7 +703,7 @@ def stat_dir(dir_url: str, *, timeout: Optional[float] = None) -> Dict[str, Tupl
 # ------------------------------------------------------------- upload plane
 def default_token() -> Optional[str]:
     """Upload bearer token (knob ``RA_REMOTE_TOKEN``; DESIGN.md §11)."""
-    return os.environ.get("RA_REMOTE_TOKEN") or None
+    return _env_str("RA_REMOTE_TOKEN") or None
 
 
 def _views_of(data) -> Tuple[List[memoryview], int]:

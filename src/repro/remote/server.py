@@ -52,7 +52,7 @@ from typing import Dict, Optional, Tuple
 from urllib.parse import unquote, urlsplit
 
 from ..core import io as raio
-from ..core.spec import RawArrayError
+from ..core.spec import RawArrayError, env_str as _env_str
 
 _COPY_CHUNK = 1 << 20
 
@@ -68,12 +68,12 @@ class ServerMetrics:
     def __init__(self, max_paths: int = 1024):
         self._lock = threading.Lock()
         self._t0 = time.monotonic()
-        self.requests = 0
-        self.bytes_out = 0
-        self.bytes_in = 0
-        self.errors = 0
+        self.requests = 0   # guarded-by: _lock
+        self.bytes_out = 0  # guarded-by: _lock
+        self.bytes_in = 0   # guarded-by: _lock
+        self.errors = 0     # guarded-by: _lock
         self._max_paths = max_paths
-        self._path_hits: Dict[str, int] = {}
+        self._path_hits: Dict[str, int] = {}  # guarded-by: _lock
 
     def record(self, path: str, status: int) -> None:
         with self._lock:
@@ -621,6 +621,8 @@ def serve(
     server = ArrayServer(root, (host, port), verbose=verbose,
                          upload_token=upload_token, delay_s=delay_s,
                          latency_s=latency_s)
+    # ralint: allow=thread-lifecycle -- lifetime owned by the returned server;
+    # server.shutdown() stops serve_forever and the daemon thread exits with it
     t = threading.Thread(target=server.serve_forever, daemon=True, name="ra-remote-srv")
     t.start()
     return server
@@ -634,7 +636,7 @@ def main(argv=None) -> int:
     p.add_argument("--verbose", action="store_true", help="log each request")
     p.add_argument(
         "--upload-token",
-        default=os.environ.get("RA_REMOTE_TOKEN") or None,
+        default=_env_str("RA_REMOTE_TOKEN") or None,
         help="enable authenticated PUT uploads with this bearer token "
         "(default: RA_REMOTE_TOKEN env var; omit for a read-only server)",
     )

@@ -39,6 +39,54 @@ def _test_timeout_s() -> int:
         return 120
 
 
+# ------------------------------------------------- --ra-sanitize (tsan)
+# Opt-in concurrency sanitizer (DESIGN.md §17): instrumented locks +
+# guarded-field write tracer over the threaded data plane. A test that
+# leaves error-severity reports behind fails, even if its asserts passed.
+def pytest_addoption(parser):
+    parser.addoption(
+        "--ra-sanitize",
+        action="store_true",
+        default=False,
+        help="instrument repro locks and guarded fields with the "
+        "repro.devtools.tsan concurrency sanitizer",
+    )
+
+
+def pytest_configure(config):
+    if not config.getoption("--ra-sanitize"):
+        return
+    from repro.devtools import tsan
+
+    tsan.install()
+    watched = tsan.watch_all()
+    config._ra_tsan = tsan
+    sys.stderr.write(
+        f"ra-sanitize: instrumented locks + {len(watched)} watched classes\n"
+    )
+
+
+def pytest_unconfigure(config):
+    tsan = getattr(config, "_ra_tsan", None)
+    if tsan is not None:
+        tsan.unwatch_all()
+        tsan.uninstall()
+
+
+def pytest_runtest_teardown(item, nextitem):
+    tsan = getattr(item.config, "_ra_tsan", None)
+    if tsan is None:
+        return
+    errors = [r for r in tsan.drain() if r.severity == "error"]
+    if errors:
+        lines = "\n".join(f"  {r}" for r in errors)
+        pytest.fail(
+            f"concurrency sanitizer reported {len(errors)} error(s) "
+            f"during {item.nodeid}:\n{lines}",
+            pytrace=False,
+        )
+
+
 @pytest.hookimpl(hookwrapper=True)
 def pytest_runtest_call(item):
     timeout = _test_timeout_s()

@@ -1,0 +1,550 @@
+"""Devtools suite: ralint rules on fixture snippets, the layouts registry,
+the tsan concurrency sanitizer (including seeded recreations of two real
+historical races), and ``racat doctor`` geometry checks."""
+
+import os
+import struct
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import io as ra_io
+from repro.core import layouts
+from repro.core.racat import main as racat_main
+from repro.devtools import doctor, lint, tsan
+
+# --------------------------------------------------------------------- lint
+
+
+def _lint(src, **kw):
+    return lint.lint_source(textwrap.dedent(src), **kw)
+
+
+def _rules(violations):
+    return [v.rule for v in violations]
+
+
+class TestLintGuardedBy:
+    def test_unlocked_mutation_fires(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Cache:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.hits = 0  # guarded-by: _lock
+
+                def bump(self):
+                    self.hits += 1
+            """
+        )
+        assert _rules(vs) == ["guarded-by"]
+        assert "hits" in vs[0].msg
+
+    def test_locked_mutation_clean(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Cache:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.hits = 0  # guarded-by: _lock
+
+                def bump(self):
+                    with self._lock:
+                        self.hits += 1
+            """
+        )
+        assert vs == []
+
+    def test_init_and_locked_suffix_exempt(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Cache:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.hits = 0  # guarded-by: _lock
+                    self.hits = 1  # re-assignment in __init__ is still setup
+
+                def _bump_locked(self):
+                    self.hits += 1
+            """
+        )
+        assert vs == []
+
+    def test_mutator_method_fires(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Index:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.entries = []  # guarded-by: _lock
+
+                def add(self, x):
+                    self.entries.append(x)
+            """
+        )
+        assert _rules(vs) == ["guarded-by"]
+
+    def test_waiver_suppresses(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Cache:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.hits = 0  # guarded-by: _lock
+
+                def bump(self):
+                    self.hits += 1  # ralint: allow=guarded-by -- test fixture
+            """
+        )
+        assert vs == []
+
+    def test_nested_function_loses_lock(self):
+        # a closure handed to another thread cannot inherit the held set
+        vs = _lint(
+            """
+            import threading
+
+            class Cache:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.hits = 0  # guarded-by: _lock
+
+                def bump(self):
+                    with self._lock:
+                        def cb():
+                            self.hits += 1
+                        return cb
+            """
+        )
+        assert _rules(vs) == ["guarded-by"]
+
+
+class TestLintThreadLifecycle:
+    def test_bare_thread_fires(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Pump:
+                def start(self):
+                    self._t = threading.Thread(target=self._run)
+                    self._t.start()
+            """
+        )
+        assert _rules(vs) == ["thread-lifecycle"]
+
+    def test_event_plus_joined_stop_clean(self):
+        vs = _lint(
+            """
+            import threading
+
+            class Pump:
+                def start(self):
+                    self._stop = threading.Event()
+                    self._t = threading.Thread(target=self._run, daemon=True)
+                    self._t.start()
+
+                def stop(self):
+                    self._stop.set()
+                    self._t.join(timeout=5.0)
+            """
+        )
+        assert vs == []
+
+
+class TestLintSleepLoop:
+    def test_sleep_in_loop_fires(self):
+        vs = _lint(
+            """
+            import time
+
+            def wait_ready(x):
+                while not x.ready:
+                    time.sleep(0.05)
+            """
+        )
+        assert _rules(vs) == ["sleep-loop"]
+
+    def test_sleep_outside_loop_clean(self):
+        vs = _lint(
+            """
+            import time
+
+            def backoff_once():
+                time.sleep(0.05)
+            """
+        )
+        assert vs == []
+
+
+class TestLintStructLayout:
+    def test_unregistered_format_fires(self):
+        vs = _lint(
+            """
+            import struct
+
+            HEAD = struct.Struct("<QQQ")
+            """
+        )
+        assert _rules(vs) == ["struct-layout"]
+
+    def test_registered_format_clean(self):
+        vs = _lint(
+            """
+            import struct
+
+            HEAD = struct.Struct("<QQQQQQ")
+            TRAILER = struct.Struct("<I")
+            """
+        )
+        assert vs == []
+
+
+class TestLintEnvKnob:
+    def test_raw_environ_read_fires(self):
+        vs = _lint(
+            """
+            import os
+
+            def knob():
+                return os.environ.get("RA_MY_KNOB", "0")
+            """
+        )
+        assert "env-knob" in _rules(vs)
+
+    def test_spec_helper_clean_and_doc_checked(self):
+        src = """
+            from repro.core.spec import env_int
+
+            def knob():
+                return env_int("RA_DOCUMENTED", 4)
+        """
+        assert _lint(src, readme_knobs={"RA_DOCUMENTED"}) == []
+        vs = _lint(src, readme_knobs={"RA_OTHER"})
+        assert _rules(vs) == ["env-doc"]
+        assert "RA_DOCUMENTED" in vs[0].msg
+
+
+class TestLintTree:
+    def test_src_tree_is_clean(self):
+        # the shipped tree must satisfy its own invariants
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        src = os.path.join(repo, "src")
+        readme = os.path.join(repo, "README.md")
+        vs = lint.lint_paths([src], readme=readme if os.path.isfile(readme) else None)
+        assert vs == [], "\n".join(str(v) for v in vs)
+
+    def test_collect_guards_reads_annotations(self):
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        cache_py = os.path.join(repo, "src", "repro", "remote", "cache.py")
+        guards = lint.collect_guards(cache_py)
+        assert guards["BlockCache"]["hits"] == "_lock"
+        assert guards["BlockCache"]["_blocks"] == "_lock"
+
+
+# ------------------------------------------------------------------ layouts
+
+
+class TestLayouts:
+    def test_header_geometry(self):
+        H = layouts.HEADER
+        assert H.magic == b"rawarray"
+        assert H.head_bytes == 48
+        assert H.nbytes(3) == 48 + 24
+        assert H.magic_int == int.from_bytes(b"rawarray", "little")
+
+    def test_chunk_table_and_stats_geometry(self):
+        assert layouts.CHUNK_TABLE.head_bytes == 32
+        assert layouts.CHUNK_TABLE.entry_bytes == 32
+        assert layouts.RASTATS.head_bytes == 40
+        assert layouts.RASTATS.entry_bytes == 32
+        assert layouts.CRC32.head_bytes == 4
+
+    def test_registered_formats_closed_set(self):
+        for fmt in ("<QQQQQQ", "<QQQQ", "<QQQQQ", "<Q", "<I"):
+            assert fmt in layouts.REGISTERED_FORMATS
+        # registry sizes agree with struct itself
+        for lay in layouts.LAYOUTS.values():
+            assert struct.calcsize(lay.head_fmt) == lay.head_bytes
+
+
+# --------------------------------------------------------------------- tsan
+
+_SCOPE = ("/tests/", "/repro/", os.sep + "tests" + os.sep)
+
+
+@pytest.fixture
+def sanitizer():
+    """Locally-installed sanitizer; restores global state afterwards."""
+    was_installed = tsan.installed()
+    tsan.install(scope=_SCOPE, hold_ms=60_000)
+    yield tsan
+    tsan.drain()
+    if not was_installed:
+        tsan.uninstall()
+    else:  # suite runs under --ra-sanitize: restore its default config
+        tsan.install()
+
+
+class TestTsanLocks:
+    def test_lock_order_inversion_detected(self, sanitizer):
+        a = threading.Lock()
+        b = threading.Lock()
+        with a:
+            with b:
+                pass
+        with b:
+            with a:
+                pass
+        kinds = [r.kind for r in sanitizer.drain()]
+        assert "lock-order-inversion" in kinds
+
+    def test_consistent_order_clean(self, sanitizer):
+        a = threading.Lock()
+        b = threading.Lock()
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        assert [r for r in sanitizer.drain() if r.severity == "error"] == []
+
+    def test_acquire_after_finalize(self, sanitizer):
+        lk = threading.Lock()
+        lk.finalize()
+        with lk:
+            pass
+        kinds = [r.kind for r in sanitizer.drain()]
+        assert kinds == ["acquire-after-finalize"]
+
+    def test_long_hold_warns(self, sanitizer):
+        sanitizer.install(scope=_SCOPE, hold_ms=5)
+        lk = threading.Lock()
+        with lk:
+            time.sleep(0.03)
+        reps = sanitizer.drain()
+        assert [r.kind for r in reps] == ["long-hold"]
+        assert reps[0].severity == "warn"
+
+    def test_condition_wait_notify_works_instrumented(self, sanitizer):
+        cond = threading.Condition()
+        ready = []
+
+        def waiter():
+            with cond:
+                while not ready:
+                    cond.wait(timeout=2.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        with cond:
+            ready.append(1)
+            cond.notify_all()
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+        assert [r for r in sanitizer.drain() if r.severity == "error"] == []
+
+    def test_rlock_reentrancy_no_false_positive(self, sanitizer):
+        r = threading.RLock()
+        with r:
+            with r:
+                pass
+        assert [x for x in sanitizer.drain() if x.severity == "error"] == []
+
+
+class TestTsanFieldTracer:
+    def test_cross_thread_unguarded_write_flagged(self, sanitizer):
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: _lock
+
+        sanitizer.watch_class(Counter, {"n": "_lock"})
+        try:
+            c = Counter()
+            c.n += 1  # creator thread: single-owner idiom, exempt
+
+            def locked_bump():
+                with c._lock:
+                    c.n += 1
+
+            def racy_bump():
+                c.n += 1
+
+            for fn, expect in ((locked_bump, 0), (racy_bump, 1)):
+                t = threading.Thread(target=fn)
+                t.start()
+                t.join()
+                reps = [r for r in sanitizer.drain() if r.kind == "unguarded-write"]
+                assert len(reps) == expect, (fn.__name__, reps)
+        finally:
+            sanitizer.unwatch_all()
+
+
+class TestSeededRaces:
+    """Recreations of two races this repo actually shipped and later fixed.
+
+    These prove the sanitizer would have caught both at the time."""
+
+    def test_pr5_zombie_ring_writer(self, sanitizer):
+        # PR 5's loader ring: stop() set a flag but never joined the
+        # producer, which could wake after shutdown and write into a ring
+        # whose owner considered it dead.
+        class Ring:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.depth = 0  # guarded-by: _lock
+
+        sanitizer.watch_class(Ring, {"depth": "_lock"})
+        try:
+            ring = Ring()
+            ring.depth = 1  # creator warms the ring
+            wake = threading.Event()
+
+            def zombie():
+                wake.wait(timeout=5.0)
+                with ring._lock:  # acquire-after-finalize
+                    pass
+                ring.depth += 1  # unguarded cross-thread write
+
+            t = threading.Thread(target=zombie)
+            t.start()
+            # "shutdown": owner declares the ring dead without joining
+            ring._lock.finalize()
+            wake.set()
+            t.join(timeout=5.0)
+
+            kinds = [r.kind for r in sanitizer.drain() if r.severity == "error"]
+            assert "acquire-after-finalize" in kinds
+            assert "unguarded-write" in kinds
+        finally:
+            sanitizer.unwatch_all()
+
+    def test_pr7_cache_counter_race(self, sanitizer):
+        # PR 7's BlockCache counters: `cache.hits += 1` outside _lock.
+        # The real class + its real guarded-by annotations, via the same
+        # lint-derived map the pytest plugin uses.
+        import repro.remote.cache as cache_mod
+
+        watched = sanitizer.watch_module(cache_mod)
+        try:
+            assert "BlockCache" in watched
+            cache = cache_mod.BlockCache(capacity_bytes=1 << 20)
+            barrier = threading.Barrier(2)
+
+            def racy_reader():
+                barrier.wait(timeout=5.0)
+                for _ in range(50):
+                    cache.hits += 1  # the shipped bug: no self._lock
+
+            ts = [threading.Thread(target=racy_reader) for _ in range(2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=5.0)
+
+            reps = [r for r in sanitizer.drain() if r.kind == "unguarded-write"]
+            assert reps, "sanitizer missed the PR 7 counter race"
+            assert any("hits" in r.where for r in reps)
+        finally:
+            sanitizer.unwatch_all()
+
+    def test_guarded_cache_use_is_clean(self, sanitizer):
+        import repro.remote.cache as cache_mod
+
+        sanitizer.watch_module(cache_mod)
+        try:
+            cache = cache_mod.BlockCache(capacity_bytes=1 << 20)
+
+            def worker(i):
+                cache.put(f"k{i}", 0, b"x" * 64)
+                cache.get(f"k{i}", 0)
+                cache.get("missing", 0)
+
+            ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=5.0)
+            errors = [r for r in sanitizer.drain() if r.severity == "error"]
+            assert errors == [], errors
+        finally:
+            sanitizer.unwatch_all()
+
+
+# ------------------------------------------------------------------- doctor
+
+
+@pytest.fixture
+def corpus(tmp_path):
+    a = np.arange(4096, dtype=np.float32).reshape(64, 64)
+    plain = tmp_path / "plain.ra"
+    chunked = tmp_path / "chunked.ra"
+    ra_io.write(str(plain), a)
+    ra_io.write(str(chunked), a, codec="zlib", chunk_bytes=4096, stats=True)
+    return tmp_path, plain, chunked
+
+
+class TestDoctor:
+    def test_clean_files_pass(self, corpus):
+        _dir, plain, chunked = corpus
+        assert doctor.doctor_file(str(plain)) == []
+        assert doctor.doctor_file(str(chunked)) == []
+
+    def test_truncated_stats_block_is_drift(self, corpus):
+        d, _plain, chunked = corpus
+        bad = d / "bad.ra"
+        bad.write_bytes(chunked.read_bytes()[:-16])
+        problems = doctor.doctor_file(str(bad))
+        assert problems and any("rastats" in p for p in problems)
+
+    def test_stale_stats_window_count_is_drift(self, corpus):
+        # rewrite the rastats head to claim one window fewer: framing stays
+        # internally consistent but disagrees with the file's geometry
+        from repro.core import stats as stats_mod
+
+        d, _plain, chunked = corpus
+        data = bytearray(chunked.read_bytes())
+        idx = data.find(stats_mod.RASTATS_MAGIC_BYTES)
+        assert idx > 0
+        head = layouts.RASTATS.head_struct
+        magic, ver, block, n, cb = head.unpack_from(data, idx)
+        assert n >= 2
+        shrunk = head.pack(magic, ver, layouts.RASTATS.nbytes(n - 1), n - 1, cb)
+        trimmed = (
+            bytes(data[:idx])
+            + shrunk
+            + bytes(data[idx + head.size:idx + layouts.RASTATS.nbytes(n - 1)])
+            + bytes(data[idx + layouts.RASTATS.nbytes(n):])
+        )
+        stale = d / "stale.ra"
+        stale.write_bytes(trimmed)
+        problems = doctor.doctor_file(str(stale))
+        assert any("stale" in p for p in problems), problems
+
+    def test_racat_doctor_exit_codes(self, corpus, capsys):
+        d, plain, _chunked = corpus
+        assert racat_main(["doctor", str(plain)]) == 0
+        bad = d / "bad2.ra"
+        bad.write_bytes(plain.read_bytes()[:20])
+        assert racat_main(["doctor", str(bad)]) == 1
+        assert racat_main(["doctor", str(d)]) == 1  # dir walk finds bad2.ra
+        out = capsys.readouterr()
+        assert "DRIFT" in out.err
+
+    def test_directory_without_ra_files(self, tmp_path):
+        res = doctor.doctor_paths([str(tmp_path)])
+        assert any(problems for problems in res.values())

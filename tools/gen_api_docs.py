@@ -31,6 +31,7 @@ MODULES = [
     ("repro.core.engine", "parallel chunked I/O engine"),
     ("repro.core.codec", "chunked compression codec"),
     ("repro.core.stats", "per-chunk statistics + predicate pushdown"),
+    ("repro.core.layouts", "single-source-of-truth on-disk layout registry"),
     ("repro.core.sharded", "sharded stores (read + streaming write)"),
     ("repro.core.racat", "CLI introspection / verify / compress / ingest"),
     ("repro.remote.server", "HTTP byte-range + upload server"),
@@ -50,6 +51,9 @@ MODULES = [
     ("repro.formats.hdf5min", "minimal HDF5 baseline"),
     ("repro.formats.png", "PNG codec baseline"),
     ("repro.formats.nrrd", "NRRD baseline"),
+    ("repro.devtools.lint", "ralint: codebase-invariant AST linter"),
+    ("repro.devtools.tsan", "runtime concurrency sanitizer (locks + guarded fields)"),
+    ("repro.devtools.doctor", "racat doctor: file geometry vs the layout registry"),
 ]
 
 SECTION_RE = re.compile(r"DESIGN\.md (§\d+)")

@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""ralint CLI — the repo's codebase-invariant linter (DESIGN.md §17).
+
+Usage::
+
+    python tools/ralint.py src/            # whole tree + README knob table
+    python tools/ralint.py --no-readme f.py
+
+Thin wrapper so the linter runs without installing the package; all the
+logic lives in ``repro.devtools.lint``.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.devtools.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
